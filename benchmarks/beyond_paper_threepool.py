@@ -1,0 +1,61 @@
+"""Beyond-paper: quantify the §8 "start with two pools" guideline.
+
+The paper argues a third pool (4K/16K/64K) adds operational complexity for
+diminishing returns but gives no numbers. We compute the analytical fleet
+for 1/2/3-pool configurations on both traces and report the marginal
+savings of each added pool.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_us
+from repro.core.pools import PoolConfig, n_seq_for_cmax
+from repro.sim import A100_LLAMA3_70B, plan_fleet
+from repro.sim.profiler import HEADROOM, profile_pool
+from repro.traces import TraceSpec, generate_trace
+
+
+def three_pool_fleet(reqs, rate, thresholds=(4096, 16_384)) -> int:
+    """Pools: ≤4K (N=256 if block budget allowed... capped 128), ≤16K, ≤64K."""
+    b1, b2 = thresholds
+    groups = (
+        [r for r in reqs if r.true_total <= b1],
+        [r for r in reqs if b1 < r.true_total <= b2],
+        [r for r in reqs if r.true_total > b2],
+    )
+    cfgs = (
+        PoolConfig("p4k", b1, n_seq_for_cmax(b1), headroom=HEADROOM["short"]),
+        PoolConfig("p16k", b2, n_seq_for_cmax(b2), headroom=HEADROOM["short"]),
+        PoolConfig("p64k", 65_536, 16, headroom=HEADROOM["long"]),
+    )
+    total = 0
+    for cfg, grp in zip(cfgs, groups):
+        prof = profile_pool(cfg.name, reqs, grp, cfg, A100_LLAMA3_70B, rate)
+        total += prof.instances
+    return total
+
+
+def run(rate: float = 1000.0) -> dict:
+    out = {}
+    for trace in ("azure", "lmsys"):
+        reqs = generate_trace(
+            TraceSpec(trace=trace, num_requests=10_000, rate=rate, seed=42)
+        )
+        us = time_us(lambda: three_pool_fleet(reqs, rate), repeats=2)
+        plan = plan_fleet(trace, reqs, A100_LLAMA3_70B, rate)
+        g1 = plan.g_homo
+        g2 = plan.g_dual
+        g3 = three_pool_fleet(reqs, rate)
+        emit(
+            f"beyond/threepool/{trace}",
+            us,
+            f"one_pool={g1};two_pools={g2};three_pools={g3};"
+            f"second_pool_saves={(g1-g2)/g1:.3f};"
+            f"third_pool_adds={(g2-g3)/g1:.3f}",
+        )
+        out[trace] = (g1, g2, g3)
+    return out
+
+
+if __name__ == "__main__":
+    run()

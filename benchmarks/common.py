@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows: `us_per_call`
+times the benchmark's own computation (the algorithm under test — e.g. one
+routing decision, one DES run), `derived` carries the headline quantity the
+paper's table reports (savings %, fleet size, μ, ...).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_us(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,45 @@
+"""Figure 6: savings vs B_short threshold sweep.
+
+Paper: Azure increases monotonically (→ ~20% at 32K); LMSYS peaks at 8K
+(38.5%) then declines as N_seq drops with higher C_max. Any B_short in
+8K–16K delivers >80% of peak savings on both workloads (§8).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_us
+from repro.sim import A100_LLAMA3_70B, sensitivity_sweep
+from repro.traces import TraceSpec, generate_trace
+
+THRESHOLDS = (2048, 4096, 8192, 16_384, 32_768)
+
+
+def run(num_requests: int = 10_000, rate: float = 1000.0) -> dict:
+    out = {}
+    for trace in ("azure", "lmsys"):
+        reqs = generate_trace(
+            TraceSpec(trace=trace, num_requests=num_requests, rate=rate, seed=42)
+        )
+        us = time_us(
+            lambda: sensitivity_sweep(
+                trace, reqs, A100_LLAMA3_70B, rate, THRESHOLDS
+            ),
+            repeats=2,
+        )
+        plans = sensitivity_sweep(trace, reqs, A100_LLAMA3_70B, rate, THRESHOLDS)
+        curve = {p.b_short: p.savings for p in plans}
+        peak = max(curve.values())
+        for p in plans:
+            emit(
+                f"fig6/{trace}/b{p.b_short}",
+                us,
+                f"savings={p.savings:.3f};alpha={p.alpha:.4f};"
+                f"n_seq={p.short.n_seq};frac_of_peak="
+                f"{p.savings/peak if peak > 0 else 0:.2f}",
+            )
+        out[trace] = curve
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,118 @@
+"""Generate the EXPERIMENTS.md markdown tables from dry-run records.
+
+    PYTHONPATH=src python -m benchmarks.make_tables > results/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(__file__)), "results", "dryrun")
+
+ARCH_ORDER = [
+    "gemma-2b", "granite-3-8b", "yi-6b", "granite-34b",
+    "llama4-scout-17b-a16e", "llama4-maverick-400b-a17b",
+    "qwen2-vl-7b", "musicgen-medium", "zamba2-2.7b", "xlstm-350m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = "") -> dict:
+    out = {}
+    suffix = f"_{tag}" if tag else ""
+    for p in glob.glob(os.path.join(RESULTS, f"*__{mesh}{suffix}.json")):
+        name = os.path.basename(p)
+        if not tag and name.count("_", name.rfind("__")) > 0:
+            # exclude tagged variants when loading baselines
+            stem = name[: -len(".json")]
+            if not stem.endswith(mesh):
+                continue
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+def roofline_table(mesh: str) -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | 6·N·D / HLO | mem/chip (GB) | compile (s) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | *skipped: "
+                    f"full-attention arch at 524k* | — | — | — |"
+                )
+                continue
+            roof = r["roofline"]
+            mem = r.get("memory_analysis", {}).get("total_per_device", 0) / 1e9
+            lines.append(
+                f"| {arch} | {shape} | {fmt_ms(roof['compute_s'])} | "
+                f"{fmt_ms(roof['memory_s'])} | {fmt_ms(roof['collective_s'])} | "
+                f"**{roof['dominant']}** | "
+                f"{r.get('useful_flops_fraction', 0):.2f} | {mem:.1f} | "
+                f"{r.get('compile_s', 0):.1f} |"
+            )
+    return "\n".join(lines)
+
+
+def variant_rows(arch: str, shape: str, mesh: str, tags: list[str]) -> str:
+    rows = []
+    base = load(mesh).get((arch, shape))
+    entries = [("baseline", base)]
+    for t in tags:
+        v = load(mesh, t).get((arch, shape))
+        entries.append((t, v))
+    lines = [
+        "| variant | compute (ms) | memory (ms) | collective (ms) | dominant | bound (ms) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, r in entries:
+        if r is None or r.get("status") != "ok":
+            lines.append(f"| {name} | (missing) | | | | |")
+            continue
+        roof = r["roofline"]
+        bound = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        lines.append(
+            f"| {name} | {fmt_ms(roof['compute_s'])} | {fmt_ms(roof['memory_s'])} "
+            f"| {fmt_ms(roof['collective_s'])} | {roof['dominant']} | "
+            f"{fmt_ms(bound)} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print("## Roofline — single pod (16×16 = 256 chips)\n")
+    print(roofline_table("pod16x16"))
+    print("\n## Roofline — multi-pod (2×16×16 = 512 chips)\n")
+    print(roofline_table("pod2x16x16"))
+    print("\n## Hillclimb variants\n")
+    print("### yi-6b × decode_32k (int8 KV)\n")
+    print(variant_rows("yi-6b", "decode_32k", "pod16x16", ["int8kv"]))
+    print("\n### xlstm-350m × train_4k (pure DP)\n")
+    print(variant_rows("xlstm-350m", "train_4k", "pod16x16", ["puredp"]))
+    print("\n### granite-34b × prefill_32k (triangle causal)\n")
+    print(variant_rows("granite-34b", "prefill_32k", "pod16x16", ["triangle"]))
+    print("\n### granite-3-8b × train_4k (triangle, +dots remat)\n")
+    print(
+        variant_rows(
+            "granite-3-8b", "train_4k", "pod16x16",
+            ["triangle", "triangle_dots"],
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""§Roofline: aggregate the dry-run records into the per-cell table.
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and emits one row per (arch × shape × mesh): the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful fraction, and
+per-device memory. This is the table EXPERIMENTS.md §Roofline embeds.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)), "results", "dryrun")
+
+
+def run(mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    paths = sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json")))
+    if not paths:
+        emit("roofline/no_records", 0.0, f"run repro.launch.dryrun first ({RESULTS_DIR})")
+        return rows
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            emit(name, 0.0, "skipped=sub-quadratic-only")
+            continue
+        if rec.get("status") != "ok":
+            emit(name, 0.0, f"status={rec.get('status')}")
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory_analysis", {})
+        per_dev_gb = mem.get("total_per_device", 0) / 1e9
+        emit(
+            name,
+            rec.get("compile_s", 0.0) * 1e6,
+            f"compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};"
+            f"collective_ms={r['collective_s']*1e3:.2f};"
+            f"dominant={r['dominant']};"
+            f"useful_frac={rec.get('useful_flops_fraction', 0):.2f};"
+            f"mem_gb_per_dev={per_dev_gb:.2f}",
+        )
+        rows.append(rec)
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    run("pod2x16x16")

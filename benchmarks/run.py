@@ -1,0 +1,71 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run`` runs everything and prints
+``name,us_per_call,derived`` CSV rows (plus a header).
+
+Modules:
+  table1_pools        — Table 1 pool configs + μ
+  table2_cost         — Table 2 fleet sizes + savings + $/yr
+  table3_latency      — Table 3 TTFT/TPOT via fleet DES
+  table4_calibration  — Table 4 EMA convergence + mis-route rates
+  table5_mi300x       — Table 5 / §4.7 MI300X case study
+  fig6_sensitivity    — Fig. 6 threshold sweep
+  cost_model_gap      — §4.2 Eq. 7 vs Eq. 8 vs realized
+  reliability         — §4.3 preemptions/rejections + fault isolation
+  dispatch_overhead   — §2.2 O(1) sub-microsecond dispatch
+  roofline            — §Roofline table from dry-run records
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        beyond_paper_adaptive,
+        beyond_paper_int8kv,
+        beyond_paper_threepool,
+        cost_model_gap,
+        dispatch_overhead,
+        fig6_sensitivity,
+        reliability,
+        roofline,
+        table1_pools,
+        table2_cost,
+        table3_latency,
+        table4_calibration,
+        table5_mi300x,
+    )
+
+    print("name,us_per_call,derived")
+    modules = [
+        table1_pools,
+        table2_cost,
+        table3_latency,
+        table4_calibration,
+        table5_mi300x,
+        fig6_sensitivity,
+        cost_model_gap,
+        reliability,
+        dispatch_overhead,
+        beyond_paper_int8kv,
+        beyond_paper_threepool,
+        beyond_paper_adaptive,
+        roofline,
+    ]
+    failed = 0
+    for mod in modules:
+        try:
+            mod.run()
+        except Exception as e:
+            failed += 1
+            print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"{failed} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

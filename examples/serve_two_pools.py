@@ -1,0 +1,17 @@
+"""End-to-end driver: serve a small model with batched requests through the
+paper's two-pool system — REAL JAX engines, continuous batching, token-
+budget routing, live EMA calibration.
+
+    PYTHONPATH=src python examples/serve_two_pools.py [--arch yi-6b]
+"""
+
+import argparse
+
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--requests", type=int, default=40)
+    args = ap.parse_args()
+    serve(args.arch, requests=args.requests)

@@ -1,0 +1,5 @@
+"""Atomic sharded checkpointing with elastic restore."""
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,105 @@
+"""Core contribution of the paper: token-budget-aware pool routing.
+
+Public API:
+
+* ``EmaCalibrator`` / ``CalibState`` — self-calibrating bytes-per-token EMA.
+* ``TokenBudgetRouter`` / ``Request`` — Algorithm 1 dispatch.
+* ``PoolConfig`` / ``short_pool`` / ``long_pool`` — pool definitions.
+* ``closed_form_savings`` / ``corrected_savings`` — Eq. 7 / Eq. 8.
+"""
+
+from repro.core.calibration import (
+    CalibState,
+    EmaCalibrator,
+    init_state,
+    jax_estimate_budget,
+    jax_update,
+    jax_update_stream,
+)
+from repro.core.categories import (
+    CATEGORY_NAMES,
+    COLD_START_RATIO,
+    NUM_CATEGORIES,
+    TRUE_BYTES_PER_TOKEN,
+    Category,
+)
+from repro.core.cost_model import (
+    A100_80G,
+    LLAMA3_70B_KV,
+    MI300X,
+    QWEN3_235B_KV,
+    TPU_V5E,
+    HardwareSpec,
+    KVModelSpec,
+    annual_cost,
+    annual_savings,
+    closed_form_savings,
+    corrected_savings,
+    dual_fleet_naive,
+    homogeneous_fleet,
+    mi300x_case_study,
+)
+from repro.core.pools import (
+    KV_BLOCK_TOKENS,
+    TOTAL_KV_BLOCKS,
+    PoolConfig,
+    PoolState,
+    dual_pool_fleet,
+    fleet_instances,
+    homogeneous_pool,
+    long_pool,
+    n_seq_for_cmax,
+    short_pool,
+)
+from repro.core.router import (
+    LONG,
+    SHORT,
+    Request,
+    RouteDecision,
+    TokenBudgetRouter,
+    jax_route_batch,
+)
+
+__all__ = [
+    "CalibState",
+    "EmaCalibrator",
+    "init_state",
+    "jax_estimate_budget",
+    "jax_update",
+    "jax_update_stream",
+    "Category",
+    "CATEGORY_NAMES",
+    "COLD_START_RATIO",
+    "NUM_CATEGORIES",
+    "TRUE_BYTES_PER_TOKEN",
+    "HardwareSpec",
+    "KVModelSpec",
+    "A100_80G",
+    "MI300X",
+    "TPU_V5E",
+    "LLAMA3_70B_KV",
+    "QWEN3_235B_KV",
+    "annual_cost",
+    "annual_savings",
+    "closed_form_savings",
+    "corrected_savings",
+    "dual_fleet_naive",
+    "homogeneous_fleet",
+    "mi300x_case_study",
+    "PoolConfig",
+    "PoolState",
+    "KV_BLOCK_TOKENS",
+    "TOTAL_KV_BLOCKS",
+    "dual_pool_fleet",
+    "fleet_instances",
+    "homogeneous_pool",
+    "long_pool",
+    "n_seq_for_cmax",
+    "short_pool",
+    "Request",
+    "RouteDecision",
+    "TokenBudgetRouter",
+    "jax_route_batch",
+    "SHORT",
+    "LONG",
+]

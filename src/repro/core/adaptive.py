@@ -1,0 +1,76 @@
+"""Error-driven threshold discovery (paper §7 Future Work — implemented).
+
+The paper proposes turning B_short into a self-tuning control variable
+driven by the engines' own failure/pressure signals. This controller uses
+AIMD (additive-increase / multiplicative-decrease), the classic stable
+feedback law:
+
+* **error pressure** (short-pool preemptions, truncations, rejections, or
+  hard queue overload) → multiplicative *decrease*: mis-routed heavy
+  requests are being forced into the small pool, shift the boundary down;
+* **quiet windows with long-pool slack** → additive *increase*: capture
+  more traffic in the cheap pool (the savings gradient in Fig. 6 is
+  monotone for heavy-tailed traffic).
+
+The controller never crosses the hard bound B_short ≤ C_max(P_s), and its
+moves are clamped so one bad window cannot flap the fleet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class AdaptiveThreshold:
+    b_short: int
+    b_min: int = 1024
+    b_max: int = 8192  # short pool C_max
+    increase_step: int = 512
+    decrease_factor: float = 0.75
+    error_rate_hi: float = 0.01  # §8: alert when 5-min preemption rate >1%
+    overload_ratio_hi: float = 2.0  # short queue ≥ 2× long queue slack
+
+    def __post_init__(self) -> None:
+        self.b_short = min(max(self.b_short, self.b_min), self.b_max)
+        self.history: list[tuple[int, str]] = []
+
+    def update(
+        self,
+        *,
+        window_requests: int,
+        short_errors: int,
+        short_queue: int,
+        short_instances: int,
+        long_queue: int,
+        long_instances: int,
+    ) -> int:
+        """One control step per monitoring window. Returns the new B_short.
+
+        Pressure = queued requests per instance (the same quantity the
+        spillover clause reads); errors = preemptions+rejections+truncations
+        in the window.
+        """
+        if window_requests <= 0:
+            return self.b_short
+        err_rate = short_errors / window_requests
+        short_pressure = short_queue / max(1, short_instances)
+        long_pressure = long_queue / max(1, long_instances)
+
+        if err_rate > self.error_rate_hi or (
+            short_pressure > self.overload_ratio_hi * max(long_pressure, 0.25)
+            and short_pressure > 1.0
+        ):
+            new_b = int(self.b_short * self.decrease_factor)
+            reason = "decrease"
+        elif long_pressure < 0.25 and short_pressure < 1.0:
+            new_b = self.b_short + self.increase_step
+            reason = "increase"
+        else:
+            new_b = self.b_short
+            reason = "hold"
+        new_b = min(max(new_b, self.b_min), self.b_max)
+        if new_b != self.b_short:
+            self.history.append((new_b, reason))
+        self.b_short = new_b
+        return new_b

@@ -1,0 +1,149 @@
+"""Pool configuration and fleet sizing (paper §2, §3, Table 1).
+
+A *pool* is a set of identically-configured serving instances. The two-pool
+design (paper §8: "start with two pools") is the default, but the types below
+support N pools so the three-pool ablation can be expressed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+#: vLLM-style fixed KV block size in tokens (paper §3, effect 3 / Appendix A).
+KV_BLOCK_TOKENS = 16
+
+#: Total KV block budget per instance used by the paper's dynamic pool
+#: configuration (Appendix A): N_seq = min(128, floor(65536 / ceil(C_max/16))).
+TOTAL_KV_BLOCKS = 65_536
+
+
+def n_seq_for_cmax(
+    c_max: int, *, max_slots: int = 128, total_blocks: int = TOTAL_KV_BLOCKS
+) -> int:
+    """Sequence slots for a given C_max under the fixed block budget.
+
+    Paper Appendix A: ``N_seq = min(128, floor(65536 / ceil(B_short/16)))``.
+    ``total_blocks`` scales with KV bytes/token (int8 KV doubles it).
+    """
+    blocks_per_seq = math.ceil(c_max / KV_BLOCK_TOKENS)
+    return max(1, min(max_slots, total_blocks // blocks_per_seq))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static configuration of one pool."""
+
+    name: str
+    c_max: int  # max_model_len for every instance in the pool
+    n_seq: int  # concurrent sequence slots per instance
+    batch_token_budget: int = 8192  # B_batch: max batched tokens per iteration
+    queue_limit: int = 256  # spillover trigger: pending requests per instance
+    headroom: float = 1.05  # β queuing-headroom factor for fleet sizing
+
+    def admits(self, l_total: int) -> bool:
+        """Hard constraint: can this pool ever serve a request of L_total?"""
+        return l_total <= self.c_max
+
+
+def short_pool(
+    c_max: int = 8192, *, name: str = "short", headroom: float = 1.05
+) -> PoolConfig:
+    """The high-throughput short pool P_s (Table 1 row 2)."""
+    return PoolConfig(
+        name=name,
+        c_max=c_max,
+        n_seq=n_seq_for_cmax(c_max),
+        batch_token_budget=16_384,
+        headroom=headroom,
+    )
+
+
+def long_pool(
+    c_max: int = 65_536, *, name: str = "long", headroom: float = 1.02
+) -> PoolConfig:
+    """The high-capacity long pool P_l (Table 1 row 3)."""
+    return PoolConfig(
+        name=name,
+        c_max=c_max,
+        n_seq=n_seq_for_cmax(c_max, max_slots=16),
+        batch_token_budget=8192,
+        headroom=headroom,
+    )
+
+
+def homogeneous_pool(c_max: int = 65_536, *, headroom: float = 1.08) -> PoolConfig:
+    """Baseline: every instance provisioned for the worst case (Table 1 row 1)."""
+    return PoolConfig(
+        name="homogeneous",
+        c_max=c_max,
+        n_seq=n_seq_for_cmax(c_max, max_slots=16),
+        batch_token_budget=8192,
+        headroom=headroom,
+    )
+
+
+@dataclasses.dataclass
+class PoolState:
+    """Mutable per-pool dispatch state visible to the router (O(1) reads)."""
+
+    config: PoolConfig
+    num_instances: int = 1
+    queue_depth: int = 0  # requests waiting across the pool
+    active: int = 0  # requests currently being served
+
+    @property
+    def overloaded(self) -> bool:
+        return self.queue_depth > self.config.queue_limit * self.num_instances
+
+    @property
+    def utilization_slots(self) -> float:
+        cap = max(1, self.num_instances * self.config.n_seq)
+        return self.active / cap
+
+
+def fleet_instances(
+    rate: float, mu_per_instance: float, headroom: float = 1.0
+) -> int:
+    """ceil(λ/μ × β) — analytical fleet size (paper Appendix A)."""
+    if mu_per_instance <= 0:
+        raise ValueError("throughput must be positive")
+    return max(1, math.ceil(rate / mu_per_instance * headroom))
+
+
+def dual_pool_fleet(
+    rate: float,
+    alpha: float,
+    mu_short: float,
+    mu_long: float,
+    *,
+    headroom_short: float = 1.05,
+    headroom_long: float = 1.02,
+) -> tuple[int, int]:
+    """Corrected fleet formula (Eq. 8): G = αλ/μ_Ps + (1−α)λ/μ_Pl.
+
+    Returns (short_instances, long_instances); either may be 0 when its
+    traffic share is 0.
+    """
+    short = (
+        fleet_instances(alpha * rate, mu_short, headroom_short) if alpha > 0 else 0
+    )
+    long_ = (
+        fleet_instances((1.0 - alpha) * rate, mu_long, headroom_long)
+        if alpha < 1.0
+        else 0
+    )
+    return short, long_
+
+
+def validate_pools(pools: Sequence[PoolConfig]) -> None:
+    """Sanity checks shared by router and simulator."""
+    if not pools:
+        raise ValueError("need at least one pool")
+    names = [p.name for p in pools]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate pool names: {names}")
+    for p in pools:
+        if p.c_max <= 0 or p.n_seq <= 0:
+            raise ValueError(f"pool {p.name} has non-positive capacity")

@@ -1,0 +1,177 @@
+"""Token-budget pool dispatch (paper §2.2, Algorithm 1).
+
+The dispatch is three comparisons and a queue-depth lookup — O(1). The
+router never needs a tokenizer: the byte length |r| plus the calibrated
+per-category ratio gives the input-token estimate, and the request's own
+``max_output_tokens`` cap gives the output term.
+
+Two paths:
+
+* :class:`TokenBudgetRouter` — host-side production dispatch (scalar, O(1)).
+* :func:`jax_route_batch` — vectorized JAX routing of a whole request batch
+  (used for trace re-simulation and the sensitivity sweeps, where millions of
+  routing decisions are evaluated at once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import (
+    DEFAULT_GAMMA,
+    CalibState,
+    EmaCalibrator,
+    jax_estimate_budget,
+)
+from repro.core.pools import PoolConfig, PoolState, validate_pools
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """A routing-layer view of one inference request."""
+
+    request_id: int
+    byte_len: int  # |r|: prompt byte length (observable pre-tokenization)
+    max_output_tokens: int  # L_out cap from the API request
+    category: int  # traffic category k
+    arrival_time: float = 0.0
+    # Ground truth, known only to the simulator/engine (never to the router):
+    true_input_tokens: int = -1
+    true_output_tokens: int = -1
+
+    @property
+    def true_total(self) -> int:
+        return self.true_input_tokens + self.true_output_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    pool: str
+    estimated_total: int
+    spilled: bool
+    conservative_ratio: float
+
+
+class TokenBudgetRouter:
+    """Algorithm 1: token-budget pool dispatch with closed-loop calibration."""
+
+    def __init__(
+        self,
+        short: PoolState,
+        long: PoolState,
+        *,
+        b_short: int = 8192,
+        calibrator: Optional[EmaCalibrator] = None,
+        spillover: bool = True,
+    ) -> None:
+        validate_pools([short.config, long.config])
+        if short.config.c_max > long.config.c_max:
+            raise ValueError("short pool must have the smaller C_max")
+        if b_short > short.config.c_max:
+            raise ValueError(
+                f"B_short={b_short} exceeds short-pool C_max={short.config.c_max}"
+            )
+        self.short = short
+        self.long = long
+        self.b_short = b_short
+        self.calibrator = calibrator or EmaCalibrator()
+        self.spillover = spillover
+        # Dispatch statistics (observability; §8 "monitor preemption").
+        self.routed = {"short": 0, "long": 0}
+        self.spill_count = 0
+
+    # -- dispatch (Algorithm 1 lines 1–14) ----------------------------------
+    def route(self, request: Request) -> RouteDecision:
+        c_star = self.calibrator.conservative_ratio(request.category)
+        l_total = self.calibrator.estimate_total_budget(
+            request.byte_len, request.max_output_tokens, request.category
+        )
+
+        # Hard constraint: exceeds short pool capacity → long pool, no spill.
+        if not self.short.config.admits(l_total):
+            self.routed["long"] += 1
+            return RouteDecision("long", l_total, False, c_star)
+
+        # Budget-based dispatch.
+        target, alternate = (
+            (self.short, self.long)
+            if l_total <= self.b_short
+            else (self.long, self.short)
+        )
+
+        # Load-aware spillover: redirect when the target is overloaded and
+        # the alternate can serve the request (hard constraint re-checked).
+        spilled = False
+        if (
+            self.spillover
+            and target.overloaded
+            and not alternate.overloaded
+            and alternate.config.admits(l_total)
+        ):
+            target = alternate
+            spilled = True
+            self.spill_count += 1
+
+        self.routed[target.config.name] += 1
+        return RouteDecision(target.config.name, l_total, spilled, c_star)
+
+    # -- feedback (Algorithm 1 lines 15–19) ---------------------------------
+    def on_response(self, request: Request, prompt_tokens: int) -> None:
+        self.calibrator.observe(request.byte_len, prompt_tokens, request.category)
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> dict:
+        total = max(1, self.routed["short"] + self.routed["long"])
+        return {
+            "routed_short": self.routed["short"],
+            "routed_long": self.routed["long"],
+            "short_fraction": self.routed["short"] / total,
+            "spill_count": self.spill_count,
+            "calibration": self.calibrator.snapshot(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Vectorized JAX batch routing
+# ---------------------------------------------------------------------------
+
+SHORT, LONG = 0, 1
+
+
+@jax.jit
+def _route_kernel(
+    budgets: jax.Array,
+    short_cmax: jax.Array,
+    b_short: jax.Array,
+) -> jax.Array:
+    exceeds = budgets > short_cmax
+    long_budget = budgets > b_short
+    return jnp.where(exceeds | long_budget, LONG, SHORT).astype(jnp.int32)
+
+
+def jax_route_batch(
+    state: CalibState,
+    byte_lens: jax.Array,
+    max_output_tokens: jax.Array,
+    categories: jax.Array,
+    *,
+    short_cmax: int = 8192,
+    b_short: int = 8192,
+    gamma: float = DEFAULT_GAMMA,
+) -> tuple[jax.Array, jax.Array]:
+    """Route a whole batch at once. Returns (pool_ids, estimated_budgets).
+
+    pool_ids: (N,) int32 with 0=short, 1=long. Spillover is a load-dependent
+    runtime concern and is not part of the static batch decision.
+    """
+    budgets = jax_estimate_budget(
+        state, byte_lens, max_output_tokens, categories, gamma=gamma
+    )
+    pools = _route_kernel(
+        budgets, jnp.int32(short_cmax), jnp.int32(b_short)
+    )
+    return pools, budgets

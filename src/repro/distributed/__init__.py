@@ -1,0 +1,41 @@
+"""Distribution: logical-axis sharding, collectives, fault tolerance."""
+
+from repro.distributed.collectives import (
+    compressed_psum,
+    dequantize_int8,
+    make_compressed_grad_sync,
+    quantize_int8,
+)
+from repro.distributed.fault import (
+    HealthMonitor,
+    SimulatedFailure,
+    StepTimer,
+    elastic_mesh,
+    largest_mesh_shape,
+)
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    AxisRules,
+    constrain,
+    make_sharding,
+    tree_pspecs,
+    tree_shardings,
+)
+
+__all__ = [
+    "compressed_psum",
+    "dequantize_int8",
+    "make_compressed_grad_sync",
+    "quantize_int8",
+    "HealthMonitor",
+    "SimulatedFailure",
+    "StepTimer",
+    "elastic_mesh",
+    "largest_mesh_shape",
+    "DEFAULT_RULES",
+    "AxisRules",
+    "constrain",
+    "make_sharding",
+    "tree_pspecs",
+    "tree_shardings",
+]

@@ -1,0 +1,119 @@
+"""Fault tolerance: failure detection, elastic re-meshing, straggler policy.
+
+Production story (1000+ nodes):
+
+* every host heartbeats; the coordinator marks hosts dead after
+  ``timeout_s`` (here: :class:`HealthMonitor`, driven by tests/examples);
+* on failure the launcher rebuilds the largest valid mesh from surviving
+  devices (:func:`elastic_mesh`), restores the latest checkpoint with the
+  *new* shardings (resharding happens in ``device_put`` — the checkpoint
+  format is layout-free), and resumes from the step counter (the data
+  pipeline is seekable, so no data is lost or repeated);
+* stragglers: serving-side, pool spillover absorbs slow instances
+  (Algorithm 1); training-side, :class:`StepTimer` flags outlier steps so
+  the launcher can evict persistent stragglers at the next elastic restart
+  (synchronous SGD keeps steps bit-reproducible — we trade tail latency for
+  determinism, and mitigate with eviction rather than async updates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Heartbeat bookkeeping for the launcher's retry loop."""
+
+    timeout_s: float = 60.0
+
+    def __post_init__(self) -> None:
+        self.last_seen: dict[int, float] = {}
+        self.dead: set[int] = set()
+
+    def heartbeat(self, host_id: int, now: Optional[float] = None) -> None:
+        self.last_seen[host_id] = time.monotonic() if now is None else now
+
+    def mark_dead(self, host_id: int) -> None:
+        self.dead.add(host_id)
+
+    def alive_hosts(self, now: Optional[float] = None) -> list[int]:
+        t = time.monotonic() if now is None else now
+        return [
+            h
+            for h, seen in self.last_seen.items()
+            if h not in self.dead and t - seen <= self.timeout_s
+        ]
+
+
+def largest_mesh_shape(
+    n_devices: int, *, model_parallel: int, max_data: Optional[int] = None
+) -> tuple[int, int]:
+    """Largest (data, model) grid from surviving devices.
+
+    Model parallelism is fixed by the model's memory footprint; elasticity
+    happens on the data axis (whole TP groups are added/removed).
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need at least one TP group ({model_parallel}), got {n_devices}"
+        )
+    data = n_devices // model_parallel
+    if max_data is not None:
+        data = min(data, max_data)
+    return data, model_parallel
+
+
+def elastic_mesh(
+    devices: Optional[Sequence] = None,
+    *,
+    model_parallel: int = 1,
+    axis_names: tuple[str, str] = ("data", "model"),
+) -> Mesh:
+    """Build the largest (data, model) mesh from the given devices."""
+    devs = list(devices if devices is not None else jax.devices())
+    data, model = largest_mesh_shape(len(devs), model_parallel=model_parallel)
+    import numpy as np
+
+    grid = np.array(devs[: data * model]).reshape(data, model)
+    return Mesh(grid, axis_names)
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """Detects straggler steps: > multiplier × rolling-median step time."""
+
+    window: int = 32
+    multiplier: float = 2.0
+
+    def __post_init__(self) -> None:
+        self.history: list[float] = []
+        self.straggler_steps: list[int] = []
+        self._step = 0
+
+    def record(self, duration_s: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self._step += 1
+        hist = self.history[-self.window :]
+        is_straggler = False
+        if len(hist) >= 8:
+            med = sorted(hist)[len(hist) // 2]
+            if duration_s > self.multiplier * med:
+                is_straggler = True
+                self.straggler_steps.append(self._step)
+        self.history.append(duration_s)
+        return is_straggler
+
+    @property
+    def straggler_rate(self) -> float:
+        return len(self.straggler_steps) / max(1, self._step)
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by tests/examples to exercise the restart path."""

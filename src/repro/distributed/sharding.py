@@ -1,0 +1,146 @@
+"""Logical-axis sharding: model code names axes, meshes map them.
+
+Models annotate every parameter / activation dimension with a *logical* axis
+name ("vocab", "heads", "ffn", "experts", "batch", ...). A :class:`AxisRules`
+table maps logical names to mesh axes, so the same model definition runs on
+the single-pod ``("data","model")`` mesh, the multi-pod
+``("pod","data","model")`` mesh, or a laptop 1-device mesh without edits —
+the MaxText/Flax "logical axis rules" pattern, implemented standalone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping from logical axis names to mesh axis names."""
+
+    rules: tuple[tuple[str, MeshAxes], ...]
+
+    def lookup(self, logical: Optional[str], mesh: Mesh) -> MeshAxes:
+        if logical is None:
+            return None
+        for name, target in self.rules:
+            if name == logical:
+                return _filter_present(target, mesh)
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]], mesh: Mesh) -> P:
+        """PartitionSpec for a tensor annotated with logical axis names.
+
+        Mesh axes may appear at most once in a PartitionSpec; later duplicate
+        uses degrade to replication on that dimension (with the first use
+        winning), which matches the conservative GSPMD default.
+        """
+        used: set[str] = set()
+        parts: list[MeshAxes] = []
+        for logical in logical_axes:
+            target = self.lookup(logical, mesh)
+            target_t = (
+                (target,) if isinstance(target, str) else tuple(target or ())
+            )
+            fresh = tuple(a for a in target_t if a not in used)
+            used.update(fresh)
+            if not fresh:
+                parts.append(None)
+            elif len(fresh) == 1:
+                parts.append(fresh[0])
+            else:
+                parts.append(fresh)
+        return P(*parts)
+
+
+def _filter_present(target: MeshAxes, mesh: Mesh) -> MeshAxes:
+    """Drop mesh axes the current mesh doesn't have (e.g. no "pod" axis)."""
+    if target is None:
+        return None
+    names = set(mesh.axis_names)
+    if isinstance(target, str):
+        return target if target in names else None
+    kept = tuple(a for a in target if a in names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+#: Default rules for the production meshes (DESIGN.md §6).
+DEFAULT_RULES = AxisRules(
+    rules=(
+        # data-like
+        ("batch", ("pod", "data")),
+        ("serve_batch", ("pod", "data")),
+        # model/tensor parallel
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("ffn", "model"),
+        ("experts", "model"),
+        ("ssm_heads", "model"),
+        ("kv_seq", "model"),  # MQA decode: shard cache sequence instead
+        # sequence parallelism over the data axis (long-context, batch=1)
+        ("seq_data", "data"),
+        # never sharded
+        ("layers", None),
+        ("embed", None),
+        ("seq", None),
+        ("head_dim", None),
+        ("state", None),
+        ("conv", None),
+        ("codebooks", None),
+    )
+)
+
+
+def make_sharding(
+    mesh: Mesh, rules: AxisRules, logical_axes: Sequence[Optional[str]]
+) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(logical_axes, mesh))
+
+
+def tree_pspecs(axes_tree: Any, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def tree_shardings(axes_tree: Any, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree_pspecs(axes_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]], rules: AxisRules = DEFAULT_RULES) -> jax.Array:
+    """In-graph sharding hint; no-op outside a mesh context."""
+    try:
+        mesh = _current_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, rules.spec(logical_axes, mesh))
+        )
+    except Exception:
+        return x
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        return mesh
+    except Exception:
+        return None

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the serving hot spots, with jnp oracles.
+
+* ``flash_attention`` — prefill causal attention (GQA via index-map folding)
+* ``paged_attention`` — decode over block-table KV pages (vLLM→TPU port)
+* ``ssd_scan``        — Mamba-2 chunked state-space scan
+
+Validated with ``interpret=True`` on CPU against :mod:`repro.kernels.ref`;
+compiled by Mosaic on real TPU backends.
+"""
+
+from repro.kernels.ops import flash_attention, paged_attention, ssd_scan
+from repro.kernels import ref
+
+__all__ = ["flash_attention", "paged_attention", "ssd_scan", "ref"]

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Layout adaptation between the model code's (B, L, H, D) convention and the
+kernels' head-major tiling, plus automatic ``interpret=True`` on non-TPU
+backends (this container is CPU-only; TPU is the compile target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, L, H, D) — model layout
+    k: jax.Array,  # (B, L, K, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    qh = jnp.swapaxes(q, 1, 2)  # (B, H, L, D)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_pallas(
+        qh, kh, vh, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jax.Array,  # (B, H, D)
+    k_pages: jax.Array,  # (P, page, K, D) — bf16/f32, or int8 (+scales)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, pages_per_seq) int32
+    lengths: jax.Array,  # (B,) int32
+    k_scales: jax.Array | None = None,  # (P, page, K, 1) for int8 pages
+    v_scales: jax.Array | None = None,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    return paged_attention_pallas(
+        q, k_pages, v_pages, block_tables, lengths,
+        k_scales=k_scales, v_scales=v_scales, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # (B, L, H, P) — model layout
+    dt: jax.Array,  # (B, L, H) positive
+    a_neg: jax.Array,  # (H,) negative decay
+    b_mat: jax.Array,  # (B, L, N)
+    c_mat: jax.Array,  # (B, L, N)
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    if interpret is None:
+        interpret = _default_interpret()
+    # fold dt into x and decay (kernel is a pure gated scan)
+    xh = jnp.swapaxes(x * dt[..., None].astype(x.dtype), 1, 2)  # (B,H,L,P)
+    log_a = jnp.swapaxes(
+        a_neg[None, None, :].astype(jnp.float32) * dt.astype(jnp.float32), 1, 2
+    )  # (B, H, L)
+    y, s_final = ssd_scan_pallas(
+        xh, log_a, b_mat, c_mat, chunk=chunk, interpret=interpret
+    )
+    return jnp.swapaxes(y, 1, 2), s_final

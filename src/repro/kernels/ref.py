@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is a direct, unchunked implementation — deliberately simple
+and memory-hungry, used only at test sizes. Kernel tests sweep shapes and
+dtypes and ``assert_allclose`` against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Lq, H, D)
+    k: jax.Array,  # (B, Lk, K, D)
+    v: jax.Array,  # (B, Lk, K, D)
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Dense softmax attention with GQA head grouping (fp32 softmax)."""
+    b, lq, h, d = q.shape
+    _, lk, n_kv, _ = k.shape
+    g = h // n_kv
+    qg = q.reshape(b, lq, n_kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, lq, h, d).astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jax.Array,  # (B, H, D) — one query token per sequence
+    k_pages: jax.Array,  # (P, page, K, D) — global KV page pool
+    v_pages: jax.Array,  # (P, page, K, D)
+    block_tables: jax.Array,  # (B, pages_per_seq) int32 page ids
+    lengths: jax.Array,  # (B,) int32 valid context lengths
+) -> jax.Array:
+    """Gathers each sequence's pages and runs dense masked attention."""
+    b, h, d = q.shape
+    _, page, n_kv, _ = k_pages.shape
+    pages_per_seq = block_tables.shape[1]
+    g = h // n_kv
+
+    # gather (B, S, K, D) with S = pages_per_seq * page
+    kg = k_pages[block_tables].reshape(b, pages_per_seq * page, n_kv, d)
+    vg = v_pages[block_tables].reshape(b, pages_per_seq * page, n_kv, d)
+
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(pages_per_seq * page)
+    valid = pos[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vg.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) positive
+    a_neg: jax.Array,  # (H,) negative decay
+    b_mat: jax.Array,  # (B, L, N)  (single group)
+    c_mat: jax.Array,  # (B, L, N)
+    *,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential Mamba-2 recurrence (fp32): the ground truth for ssd_scan."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s, inputs):
+        x_t, dt_t, b_t, c_t = inputs  # (B,H,P), (B,H), (B,N), (B,N)
+        a = jnp.exp(a_neg[None] * dt_t)  # (B, H)
+        s_new = (
+            a[..., None, None] * s
+            + dt_t[..., None, None] * x_t[..., None] * b_t[:, None, None, :]
+        )
+        y = jnp.einsum("bn,bhpn->bhp", c_t, s_new)
+        return s_new, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+    )
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_final

@@ -1,0 +1,10 @@
+"""Launchers: production meshes, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets ``XLA_FLAGS`` at import — import it only
+in a dedicated process (``python -m repro.launch.dryrun``), never from
+tests or benchmarks.
+"""
+
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run process.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the production mesh (16×16 single-pod /
+2×16×16 multi-pod), derives the sharding policy, lowers the appropriate
+step function over ShapeDtypeStruct stand-ins (zero allocation), compiles
+it, and records:
+
+* ``memory_analysis()``  — per-device bytes (proves the config fits),
+* ``cost_analysis()``    — HLO FLOPs / bytes for §Roofline,
+* optimized-HLO collective stats — wire bytes for the collective term.
+
+Results are printed and saved as JSON under results/dryrun/ for the
+roofline benchmark and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape decode_32k
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ASSIGNED,
+    SHAPES_BY_NAME,
+    get_config,
+    shape_applicable,
+)
+from repro.distributed.sharding import tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.launch.policy import build_policy
+from repro.launch.analytic_cost import cell_cost
+from repro.launch.hlo_parse import parse_collectives
+from repro.launch.roofline import Roofline, model_flops_estimate
+from repro.models.model_zoo import Model
+from repro.training.train_loop import TrainConfig, make_train_step, opt_state_axes
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(__file__)))),
+    "results",
+    "dryrun",
+)
+
+#: Use factored-second-moment optimizer above this size (AdamW state would
+#: not fit the assigned mesh — see EXPERIMENTS.md §Dry-run).
+ADAFACTOR_THRESHOLD = 4e10
+
+
+def _batch_shardings(axes: dict, mesh, rules):
+    from jax.sharding import NamedSharding
+
+    return {
+        k: NamedSharding(mesh, rules.spec(ax, mesh)) for k, ax in axes.items()
+    }
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    causal_mode: str = "masked",
+    remat: str = "full",
+    kv_dtype: str = "bf16",
+    pure_dp: bool = False,
+    donate: bool = True,
+    extra_tag: str = "",
+) -> dict:
+    """Lower+compile one cell; returns the result record (also JSON-saved)."""
+    cfg = get_config(arch)
+    cell = SHAPES_BY_NAME[shape]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record: dict = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "status": "error",
+    }
+    if not shape_applicable(cfg, cell):
+        record["status"] = "skipped"
+        record["reason"] = (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.family} family is full-attention (DESIGN.md §4)"
+        )
+        _save(record, extra_tag)
+        return record
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    policy = build_policy(cfg, cell, mesh)
+    if pure_dp:
+        from repro.launch.policy import pure_dp_policy
+
+        policy = pure_dp_policy(cfg, cell, mesh)
+    model = Model(
+        cfg, remat=remat, causal_mode=causal_mode, kv_dtype=kv_dtype
+    )
+    record["variant"] = {
+        "causal_mode": causal_mode, "remat": remat, "kv_dtype": kv_dtype,
+        "pure_dp": pure_dp,
+    }
+
+    specs, b_axes = model.input_specs(cell)
+    rules = policy.rules
+    b_sh = _batch_shardings(b_axes, mesh, rules)
+    p_abs = model.abstract()
+    p_sh = tree_shardings(model.axes(), mesh, rules)
+
+    with mesh:
+        if cell.kind == "train":
+            opt_name = (
+                "adafactor"
+                if model.param_count() > ADAFACTOR_THRESHOLD
+                else "adamw"
+            )
+            tcfg = TrainConfig(optimizer=opt_name)
+            train_step, opt = make_train_step(model, tcfg)
+            o_abs = jax.eval_shape(opt.init, p_abs)
+            o_sh = tree_shardings(opt_state_axes(model, tcfg), mesh, rules)
+            step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = fn.lower(p_abs, o_abs, specs, step_spec)
+            record["optimizer"] = opt_name
+            tokens = cell.global_batch * cell.seq_len
+            record["model_flops"] = model_flops_estimate(
+                model.active_param_count(), tokens, train=True
+            )
+        elif cell.kind == "prefill":
+            fn = jax.jit(model.prefill, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(p_abs, specs)
+            tokens = cell.global_batch * cell.seq_len
+            record["model_flops"] = model_flops_estimate(
+                model.active_param_count(), tokens, train=False
+            )
+        else:  # decode
+            c_abs = model.cache_specs(cell)
+            c_ax = model.cache_axes(
+                cell, kv_shardable=policy.kv_heads_sharded
+            )
+            c_sh = tree_shardings(c_ax, mesh, rules)
+            fn = jax.jit(
+                model.decode_step,
+                in_shardings=(p_sh, c_sh, b_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = fn.lower(p_abs, c_abs, specs)
+            record["model_flops"] = model_flops_estimate(
+                model.active_param_count(), cell.global_batch, train=False
+            )
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = _mem_dict(mem)
+    except Exception as e:  # CPU backend may not support it
+        record["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        cost = {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+
+    # Whole-program FLOPs/bytes: analytic reconstruction (XLA's aggregate
+    # cost_analysis counts while bodies once — see analytic_cost docstring).
+    acost = cell_cost(
+        cfg,
+        cell,
+        model.param_count(),
+        causal_mode=causal_mode,
+        moe_cf=1.25 if cell.kind == "train" else 2.0,
+        optimizer=record.get("optimizer", "adamw"),
+        remat=remat,
+        kv_dtype=kv_dtype,
+    )
+    roof = Roofline(
+        flops_total=acost.flops_total,
+        bytes_total=acost.hbm_bytes,
+        collective_bytes_per_chip=colls.wire_bytes_per_chip,
+        chips=chips,
+    )
+
+    record.update(
+        status="ok",
+        chips=chips,
+        params=model.param_count(),
+        policy=policy.describe(),
+        lower_s=round(t_lower - t0, 2),
+        compile_s=round(t_compile - t_lower, 2),
+        xla_cost_analysis_body_once={
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        },
+        analytic_cost=acost.as_dict(),
+        collectives={
+            "counts": colls.counts,
+            "executed": colls.executed,
+            "wire_bytes_per_chip": colls.wire_bytes_per_chip,
+            "by_op": colls.by_op,
+        },
+        roofline=roof.as_dict(),
+        useful_flops_fraction=roof.model_flops_fraction(
+            record.get("model_flops", 0.0)
+        ),
+    )
+    _save(record, extra_tag)
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for key in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        if hasattr(mem, key):
+            out[key] = int(getattr(mem, key))
+    if out:
+        out["total_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def _save(record: dict, extra_tag: str = "") -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"_{extra_tag}" if extra_tag else ""
+    path = os.path.join(
+        RESULTS_DIR,
+        f"{record['arch']}__{record['shape']}__{record['mesh']}{tag}.json",
+    )
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all assigned cells")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--causal-mode", default="masked",
+                    choices=["masked", "triangle"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="fold the model axis into data parallelism")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for cfg in ASSIGNED:
+            for shape in SHAPES_BY_NAME:
+                cells.append((cfg.name, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        out = os.path.join(
+            RESULTS_DIR, f"{arch}__{shape}__{mesh_name}"
+            + (f"_{args.tag}" if args.tag else "") + ".json"
+        )
+        if args.skip_existing and os.path.exists(out):
+            with open(out) as f:
+                prev = json.load(f)
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[skip] {arch} × {shape} × {mesh_name} (cached)")
+                continue
+        try:
+            rec = run_cell(
+                arch,
+                shape,
+                multi_pod=args.multi_pod,
+                causal_mode=args.causal_mode,
+                remat=args.remat,
+                kv_dtype=args.kv_dtype,
+                pure_dp=args.pure_dp,
+                extra_tag=args.tag,
+            )
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(
+                    f"[ok]   {arch} × {shape} × {mesh_name}: "
+                    f"compile {rec['compile_s']}s  "
+                    f"compute {r['compute_s']*1e3:.1f}ms  "
+                    f"memory {r['memory_s']*1e3:.1f}ms  "
+                    f"collective {r['collective_s']*1e3:.1f}ms  "
+                    f"dominant={r['dominant']}"
+                )
+            else:
+                print(f"[{rec['status']}] {arch} × {shape} × {mesh_name}")
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {arch} × {shape} × {mesh_name}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+            _save(
+                {
+                    "arch": arch,
+                    "shape": shape,
+                    "mesh": mesh_name,
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                },
+                args.tag,
+            )
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

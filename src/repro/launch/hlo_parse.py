@@ -1,0 +1,213 @@
+"""Optimized-HLO parsing: per-computation collectives × while trip counts.
+
+XLA's aggregate ``cost_analysis`` counts a ``while`` body once regardless of
+trip count (verified empirically — see EXPERIMENTS.md §Roofline method), so
+naive text scans undercount anything inside the layer scan. This parser
+
+1. splits the module into computations,
+2. finds every ``while`` op, resolves its body/condition computations and
+   extracts the trip count from the condition's compare-against-constant,
+3. propagates multipliers through nested whiles,
+4. sums ring-model wire bytes for every collective, scaled by its
+   computation's execution multiplier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"=\s*\(?[^=]*?\)?\s*while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+)
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.group(1), m.group(2)
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _output_bytes(line: str) -> int:
+    """Bytes of the instruction's result shape (sum over tuple elements)."""
+    eq = line.split(" = ", 1)
+    if len(eq) != 2:
+        return 0
+    rhs = eq[1].strip()
+    op_pos = rhs.find("(")
+    head = rhs[: op_pos if op_pos > 0 else len(rhs)]
+    # head is like "bf16[1,2,3]{...} all-gather" or "(f32[..], f32[..]) tuple"
+    return sum(shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(head))
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(1, int(m.group(2)))
+    return 1
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    lines: list[str]
+
+
+def split_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and not line.startswith(" "):
+            cur = Computation(
+                name=m.group(2), is_entry=bool(m.group(1)), lines=[]
+            )
+            comps[cur.name] = cur
+            continue
+        if cur is not None and line.strip().startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(line.strip())
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest compare-constant in the condition computation (loop bound)."""
+    best = 1
+    for line in cond.lines:
+        if "compare(" in line or "constant(" in line:
+            for m in _CONST_CMP_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def computation_multipliers(comps: dict[str, Computation]) -> dict[str, int]:
+    """Execution count of each computation (nested while products)."""
+    mult: dict[str, int] = defaultdict(lambda: 1)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return dict(mult)
+
+    # edges: computation -> [(child, factor)]
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for comp in comps.values():
+        for line in comp.lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond_name, body_name = wm.group(1), wm.group(2)
+                trips = (
+                    _trip_count(comps[cond_name])
+                    if cond_name in comps
+                    else 1
+                )
+                edges[comp.name].append((body_name, trips))
+                edges[comp.name].append((cond_name, trips))
+                continue
+            # non-while references execute once per parent execution
+            for m in re.finditer(
+                r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)%?([\w\.\-]+)",
+                line,
+            ):
+                edges[comp.name].append((m.group(1), 1))
+
+    seen = set()
+    stack = [(entry.name, 1)]
+    while stack:
+        name, factor = stack.pop()
+        key = (name, factor)
+        if key in seen:
+            continue
+        seen.add(key)
+        mult[name] = max(mult[name], factor)
+        for child, f in edges.get(name, ()):
+            if child in comps:
+                stack.append((child, factor * f))
+    mult[entry.name] = 1
+    return dict(mult)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict  # static instruction counts per op kind
+    executed: dict  # trip-count-scaled execution counts
+    wire_bytes_per_chip: float
+    by_op: dict
+
+    def total_ops(self) -> int:
+        return sum(self.counts.values())
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    comps = split_computations(hlo)
+    mult = computation_multipliers(comps)
+    counts = {c: 0 for c in COLLECTIVE_OPS}
+    executed = {c: 0 for c in COLLECTIVE_OPS}
+    wire = {c: 0.0 for c in COLLECTIVE_OPS}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 1)
+        for line in comp.lines:
+            if "-done(" in line:
+                continue  # async pair: counted at -start
+            for op in COLLECTIVE_OPS:
+                if f" {op}(" in line or f" {op}-start(" in line:
+                    out_b = _output_bytes(line)
+                    n = _group_size(line)
+                    if n <= 1:
+                        break
+                    frac = (n - 1) / n
+                    if op == "all-gather":
+                        b = out_b * frac
+                    elif op == "reduce-scatter":
+                        b = out_b * (n - 1)  # input = out × n
+                    elif op == "all-reduce":
+                        b = 2.0 * out_b * frac
+                    elif op == "all-to-all":
+                        b = out_b * frac
+                    else:
+                        b = out_b
+                    counts[op] += 1
+                    executed[op] += m
+                    wire[op] += b * m
+                    break
+    return CollectiveStats(
+        counts=counts,
+        executed=executed,
+        wire_bytes_per_chip=sum(wire.values()),
+        by_op=wire,
+    )

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis extends data parallelism across the pod boundary (DCN-ish links), the
+inner two stay intra-pod (ICI).
+
+Defined as functions, not module constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model_parallel: int = 1) -> Mesh:
+    """Whatever this host has (tests/examples): (data, model)."""
+    n = jax.device_count()
+    mp = min(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def mesh_axis_size(mesh: Mesh, name: str, default: int = 1) -> int:
+    try:
+        return mesh.shape[name]
+    except KeyError:
+        return default

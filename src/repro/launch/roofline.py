@@ -1,0 +1,220 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_wire_bytes_per_chip / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+parsed from the *optimized* (post-SPMD) HLO: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op contributes ring-model
+bytes-on-wire per chip:
+
+    all-gather       (N-1)/N × output_bytes
+    reduce-scatter   (N-1)/N × input_bytes  (≈ output_bytes × (N-1))
+    all-reduce       2 (N-1)/N × bytes
+    all-to-all       (N-1)/N × bytes
+    collective-permute   bytes
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.core.cost_model import TPU_V5E, HardwareSpec
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """bytes of one HLO shape literal like ``bf16[16,4096,128]``."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.group(1), m.group(2)
+    if dtype == "token" or dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_output_bytes(line: str) -> int:
+    """Total bytes of the op's output shape(s) (tuple → sum)."""
+    eq = line.split("=", 1)
+    if len(eq) != 2:
+        return 0
+    rhs = eq[1].strip()
+    # output shape is the first shape literal(s) before the op name
+    total = 0
+    for m in _SHAPE_RE.finditer(rhs.split(")")[0] + ")"):
+        total += shape_bytes(m.group(0))
+    # simpler: first tuple or single shape
+    first = re.match(r"\(?((?:\w+\[[\d,]*\](?:,\s*)?)+)\)?", rhs)
+    if first:
+        total = sum(
+            shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(first.group(1))
+        )
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    wire_bytes_per_chip: float
+    by_op: dict
+
+    def total_ops(self) -> int:
+        return sum(self.counts.values())
+
+
+def parse_collectives(hlo_text: str, *, default_group: int = 1) -> CollectiveStats:
+    """Scan optimized HLO for collectives → per-chip wire bytes (ring model)."""
+    counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    wire: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("%") or ls.startswith("ROOT"):
+            body = ls
+        else:
+            continue
+        for op in _COLLECTIVES:
+            # match the op as an instruction, not a substring of a name
+            if re.search(rf"\b{op}(?:-start|-done)?\(", body) or re.search(
+                rf"= *\(?[\w\[\],\s]*\)? *{op}(?:-start)?\(", body
+            ):
+                if f"{op}-done" in body:
+                    break  # counted at -start
+                out_bytes = _line_output_bytes(body)
+                n = _group_size(body, default_group)
+                if n <= 1:
+                    break
+                frac = (n - 1) / n
+                if op == "all-gather":
+                    b = out_bytes * frac
+                elif op == "reduce-scatter":
+                    b = out_bytes * (n - 1)
+                elif op == "all-reduce":
+                    b = 2.0 * out_bytes * frac
+                elif op == "all-to-all":
+                    b = out_bytes * frac
+                else:  # collective-permute
+                    b = out_bytes
+                counts[op] += 1
+                wire[op] += b
+                break
+    return CollectiveStats(
+        counts=counts,
+        wire_bytes_per_chip=sum(wire.values()),
+        by_op=wire,
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_total: float
+    bytes_total: float
+    collective_bytes_per_chip: float
+    chips: int
+    hw: HardwareSpec = TPU_V5E
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_total / (self.chips * self.hw.peak_flops_bf16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_total / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def model_flops_fraction(self, model_flops: float) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        if self.flops_total <= 0:
+            return 0.0
+        return model_flops / self.flops_total
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_total": self.flops_total,
+            "bytes_total": self.bytes_total,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "chips": self.chips,
+        }
+
+
+def make_roofline(
+    cost_analysis: Optional[dict],
+    collectives: CollectiveStats,
+    chips: int,
+    hw: HardwareSpec = TPU_V5E,
+) -> Roofline:
+    cost = cost_analysis or {}
+    return Roofline(
+        flops_total=float(cost.get("flops", 0.0)),
+        bytes_total=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_chip=collectives.wire_bytes_per_chip,
+        chips=chips,
+        hw=hw,
+    )
+
+
+def model_flops_estimate(n_params: int, tokens: int, *, train: bool) -> float:
+    """6·N·D for training; 2·N·D for a forward/decode pass."""
+    return (6.0 if train else 2.0) * n_params * tokens

@@ -1,0 +1,22 @@
+"""Model zoo: all assigned architectures in pure JAX."""
+
+from repro.models.model_zoo import Model, get_model
+from repro.models.params import (
+    ParamDef,
+    abstract_params,
+    init_params,
+    param_axes,
+    param_bytes,
+    param_count,
+)
+
+__all__ = [
+    "Model",
+    "get_model",
+    "ParamDef",
+    "abstract_params",
+    "init_params",
+    "param_axes",
+    "param_bytes",
+    "param_count",
+]

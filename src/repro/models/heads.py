@@ -1,0 +1,67 @@
+"""Output heads and losses shared across the model zoo."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def _mask_padded(logits: jax.Array, valid_vocab: Optional[int]) -> jax.Array:
+    """Megatron-style vocab padding: padded tail logits → -inf."""
+    v = logits.shape[-1]
+    if valid_vocab is None or valid_vocab >= v:
+        return logits
+    idx = jnp.arange(v)
+    return jnp.where(idx < valid_vocab, logits, jnp.finfo(jnp.float32).min)
+
+
+def lm_logits(
+    hidden: jax.Array,  # (B, L, D)
+    head: jax.Array,  # (D, V) — or embed table (V, D) when tied
+    *,
+    tied: bool = False,
+    valid_vocab: Optional[int] = None,
+) -> jax.Array:
+    if tied:
+        logits = jnp.einsum("bld,vd->blv", hidden, head)
+    else:
+        logits = jnp.einsum("bld,dv->blv", hidden, head)
+    logits = _mask_padded(logits, valid_vocab)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def codebook_logits(
+    hidden: jax.Array, heads: jax.Array, *, valid_vocab: Optional[int] = None
+) -> jax.Array:
+    """MusicGen multi-codebook heads: (B,L,D) x (K,D,V) → (B,L,K,V)."""
+    logits = jnp.einsum("bld,kdv->blkv", hidden, heads)
+    logits = _mask_padded(logits, valid_vocab)
+    return constrain(logits, ("batch", None, None, "vocab"))
+
+
+def softmax_xent(
+    logits: jax.Array,  # (..., V)
+    labels: jax.Array,  # (...) int32
+    *,
+    z_loss: float = 0.0,
+    mask: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict]:
+    """Mean cross-entropy in fp32, with optional z-loss regularizer."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll * mask) / denom
+        acc = jnp.sum((jnp.argmax(lf, -1) == labels) * mask) / denom
+    else:
+        loss = jnp.mean(nll)
+        acc = jnp.mean(jnp.argmax(lf, -1) == labels)
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,259 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + shared attention blocks.
+
+Structure (zamba2-2.7b): 54 Mamba-2 blocks; after every ``attn_every``=6
+blocks one of ``n_shared_attn_blocks``=2 *shared* attention+MLP blocks is
+applied (round-robin), with per-invocation LoRA adapters on its q/k/v and
+MLP-up projections (9 invocations). Outer ``lax.scan`` over groups, inner
+scan over the Mamba blocks of each group.
+
+Long-context: Mamba state is O(1); only the 9 shared-attention invocations
+hold KV — sharded over "model" (kv heads) for the 500k decode cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import heads as heads_lib
+from repro.models.layers import (
+    apply_rope,
+    decode_attention,
+    flash_attention,
+    mlp,
+    rms_norm,
+    rope_angles,
+)
+from repro.models.params import ParamDef, stack_tree
+from repro.models.ssm import mamba2_block, mamba2_param_defs
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+
+def _shared_block_defs(cfg: ArchConfig) -> dict:
+    h, k, dh, d, f = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model, cfg.d_ff
+    return {
+        "attn_norm": ParamDef((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "w_q": ParamDef((d, h, dh), ("embed", "heads", "head_dim"), init="scaled"),
+        "w_k": ParamDef((d, k, dh), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "w_v": ParamDef((d, k, dh), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "w_o": ParamDef((h, dh, d), ("heads", "head_dim", "embed"), init="scaled"),
+        "mlp_norm": ParamDef((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "w_up": ParamDef((d, f), ("embed", "ffn"), init="scaled"),
+        "w_down": ParamDef((f, d), ("ffn", "embed"), init="scaled"),
+    }
+
+
+def _lora_defs(cfg: ArchConfig) -> dict:
+    d, r = cfg.d_model, cfg.shared_lora_rank
+    h, k, dh, f = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    return {
+        "a_q": ParamDef((d, r), ("embed", None), init="scaled"),
+        "b_q": ParamDef((r, h, dh), (None, "heads", "head_dim"), init="zeros"),
+        "a_k": ParamDef((d, r), ("embed", None), init="scaled"),
+        "b_k": ParamDef((r, k, dh), (None, "kv_heads", "head_dim"), init="zeros"),
+        "a_v": ParamDef((d, r), ("embed", None), init="scaled"),
+        "b_v": ParamDef((r, k, dh), (None, "kv_heads", "head_dim"), init="zeros"),
+        "a_up": ParamDef((d, r), ("embed", None), init="scaled"),
+        "b_up": ParamDef((r, f), (None, "ffn"), init="zeros"),
+    }
+
+
+def _mamba_block_defs(cfg: ArchConfig) -> dict:
+    defs = mamba2_param_defs(
+        cfg.d_model, cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_conv
+    )
+    defs["in_norm"] = ParamDef(
+        (cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32
+    )
+    return defs
+
+
+def hybrid_defs(cfg: ArchConfig) -> dict:
+    per_group = cfg.attn_every
+    if cfg.n_layers % per_group:
+        raise ValueError("n_layers must divide attn_every")
+    n_groups = cfg.n_layers // per_group
+    return {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed")),
+        "mamba": stack_tree(
+            stack_tree(_mamba_block_defs(cfg), per_group, "sub"), n_groups
+        ),
+        "shared": stack_tree(
+            _shared_block_defs(cfg), cfg.n_shared_attn_blocks, "layers"
+        ),
+        "lora": stack_tree(_lora_defs(cfg), n_groups),
+        "final_norm": ParamDef(
+            (cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32
+        ),
+        "lm_head": ParamDef(
+            (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), init="scaled"
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Application
+# ---------------------------------------------------------------------------
+
+
+def _lora_proj(x, w, a, b, eqn: str, scale: float = 1.0):
+    base = jnp.einsum(eqn, x, w)
+    low = jnp.einsum("bld,dr->blr", x, a)
+    return base + scale * jnp.einsum(
+        eqn.replace("d,d", "r,r"), low, b
+    )
+
+
+def _shared_attn_apply(
+    x,
+    base: dict,
+    lora: dict,
+    cfg: ArchConfig,
+    cos,
+    sin,
+    *,
+    mode: str,
+    cache=None,
+    index=None,
+):
+    xn = rms_norm(x, base["attn_norm"], cfg.norm_eps)
+    q = _lora_proj(xn, base["w_q"], lora["a_q"], lora["b_q"], "bld,dhk->blhk")
+    k = _lora_proj(xn, base["w_k"], lora["a_k"], lora["b_k"], "bld,dhk->blhk")
+    v = _lora_proj(xn, base["w_v"], lora["a_v"], lora["b_v"], "bld,dhk->blhk")
+    if cos is not None:
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    if mode == "full":
+        o = flash_attention(
+            q, k, v, causal=True,
+            q_chunk=min(512, q.shape[1]), kv_chunk=min(512, k.shape[1]),
+        )
+        new_cache = (k, v)
+    else:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, index, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, index, 0, 0)
+        )
+        o = decode_attention(q, k_cache, v_cache, index + 1)
+        new_cache = (k_cache, v_cache)
+    x = x + jnp.einsum("blhk,hkd->bld", o, base["w_o"])
+
+    xn = rms_norm(x, base["mlp_norm"], cfg.norm_eps)
+    up = _lora_proj(xn, base["w_up"], lora["a_up"], lora["b_up"], "bld,df->blf")
+    hidden = jax.nn.gelu(up)
+    x = x + jnp.einsum("blf,fd->bld", hidden, base["w_down"])
+    return x, new_cache
+
+
+def _group_scan(
+    params,
+    cfg: ArchConfig,
+    x,
+    cos,
+    sin,
+    *,
+    mode: str,
+    states: Optional[Any] = None,
+    index=None,
+    remat: str = "none",
+):
+    per_group = cfg.attn_every
+    n_groups = cfg.n_layers // per_group
+    n_shared = cfg.n_shared_attn_blocks
+
+    def group_step(carry, xs):
+        h = carry
+        p_mamba, p_lora, inv_idx, st = xs
+        mamba_st = None if st is None else st["mamba"]
+        attn_cache = None if st is None else st["attn"]
+
+        def run(h):
+            def mamba_step(hh, xs2):
+                p_blk, st_blk = xs2
+                xn = rms_norm(hh, p_blk["in_norm"], cfg.norm_eps)
+                out, new_st = mamba2_block(
+                    xn,
+                    p_blk,
+                    n_heads=cfg.n_ssm_heads,
+                    head_dim=cfg.ssm_head_dim,
+                    d_state=cfg.ssm_state,
+                    initial_state=st_blk,
+                )
+                return hh + out, new_st
+
+            h2, new_mamba_st = jax.lax.scan(mamba_step, h, (p_mamba, mamba_st))
+            base = jax.tree.map(lambda p: p[inv_idx % n_shared], params["shared"])
+            h2, new_cache = _shared_attn_apply(
+                h2, base, p_lora, cfg, cos, sin,
+                mode=mode, cache=attn_cache, index=index,
+            )
+            return h2, {"mamba": new_mamba_st, "attn": new_cache}
+
+        if remat == "full":
+            run = jax.checkpoint(
+                run, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        h2, new_state = run(h)
+        return h2, new_state
+
+    inv_ids = jnp.arange(n_groups)
+    x, new_states = jax.lax.scan(
+        group_step, x, (params["mamba"], params["lora"], inv_ids, states)
+    )
+    return x, new_states
+
+
+def _finish(params, cfg: ArchConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    vv = cfg.vocab if cfg.padded_vocab != cfg.vocab else None
+    return heads_lib.lm_logits(x, params["lm_head"], valid_vocab=vv)
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, remat: str = "none", **_):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = constrain(x, ("batch", None, "embed"))
+    bsz, length = batch["tokens"].shape
+    pos = jnp.broadcast_to(jnp.arange(length)[None], (bsz, length))
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    x, _ = _group_scan(params, cfg, x, cos, sin, mode="full", remat=remat)
+    logits = _finish(params, cfg, x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, remat: str = "none", **kw):
+    logits, _ = forward(params, cfg, batch, remat=remat)
+    loss, metrics = heads_lib.softmax_xent(logits, batch["labels"])
+    metrics["total_loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, **_):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    bsz, length = batch["tokens"].shape
+    pos = jnp.broadcast_to(jnp.arange(length)[None], (bsz, length))
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    x, states = _group_scan(params, cfg, x, cos, sin, mode="full")
+    logits = _finish(params, cfg, x[:, -1:])
+    return logits[:, 0], states
+
+
+def decode_step(params, cfg: ArchConfig, states: Any, batch: dict, **_):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    index = batch["index"]
+    bsz = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(index)[None, None], (bsz, 1))
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    x, new_states = _group_scan(
+        params, cfg, x, cos, sin, mode="decode", states=states, index=index
+    )
+    logits = _finish(params, cfg, x)
+    return logits[:, 0], new_states

@@ -1,0 +1,237 @@
+"""Model facade: one API over all architecture families.
+
+``Model(cfg)`` exposes:
+
+* ``init(rng)`` / ``abstract()`` / ``axes()`` — parameter tree, its dry-run
+  stand-ins, and its logical sharding axes (always structurally aligned).
+* ``loss / forward / prefill / decode_step`` — family-dispatched apply fns.
+* ``input_specs(cell)`` — ShapeDtypeStruct stand-ins + logical axes for every
+  model input of a dry-run shape cell.
+* ``cache_specs(cell)`` / ``cache_axes(cell)`` — decode-state stand-ins via
+  ``jax.eval_shape`` over prefill (zero allocation) and their sharding axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import hybrid, transformer, xlstm_model
+from repro.models.params import (
+    abstract_params,
+    init_params,
+    param_axes,
+    param_bytes,
+    param_count,
+)
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": transformer,
+    "hybrid": hybrid,
+    "ssm": xlstm_model,
+}
+
+
+def _defs_for(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return transformer.transformer_defs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_defs(cfg)
+    if cfg.family == "ssm":
+        return xlstm_model.xlstm_defs(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    remat: str = "none"
+    causal_mode: str = "triangle"
+    moe_group: int = 512
+    kv_dtype: str = "bf16"  # "int8" → quantized KV cache (§Perf iteration)
+
+    def __post_init__(self) -> None:
+        self._mod = _FAMILY_MODULES[self.cfg.family]
+        self.defs = _defs_for(self.cfg)
+
+    # -- parameters ----------------------------------------------------------
+    def init(self, rng: jax.Array):
+        return init_params(self.defs, rng)
+
+    def abstract(self):
+        return abstract_params(self.defs)
+
+    def axes(self):
+        return param_axes(self.defs)
+
+    def param_count(self) -> int:
+        return param_count(self.defs)
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE: top-k experts, not all).
+
+        Used for the MODEL_FLOPS = 6·N_active·D roofline numerator.
+        """
+        total = param_count(self.defs)
+        cfg = self.cfg
+        if not cfg.is_moe:
+            return total
+        n_moe_layers = cfg.n_layers // cfg.moe_every
+        f = cfg.moe_d_ff or cfg.d_ff
+        mats = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        per_expert = mats * cfg.d_model * f
+        inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+        return total - inactive
+
+    def param_bytes(self) -> int:
+        return param_bytes(self.defs)
+
+    # -- apply ----------------------------------------------------------------
+    def forward(self, params, batch):
+        return self._mod.forward(
+            params, self.cfg, batch, remat="none",
+            causal_mode=self.causal_mode, moe_group=self.moe_group,
+        )
+
+    def loss(self, params, batch):
+        return self._mod.loss_fn(
+            params, self.cfg, batch, remat=self.remat,
+            causal_mode=self.causal_mode, moe_group=self.moe_group,
+        )
+
+    def prefill(self, params, batch):
+        return self._mod.prefill(
+            params, self.cfg, batch,
+            causal_mode=self.causal_mode, moe_group=self.moe_group,
+            kv_dtype=self.kv_dtype,
+        )
+
+    def decode_step(self, params, caches, batch):
+        return self._mod.decode_step(
+            params, self.cfg, caches, batch, moe_group=self.moe_group,
+            kv_dtype=self.kv_dtype,
+        )
+
+    # -- dry-run specs ----------------------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> tuple[dict, dict]:
+        """(ShapeDtypeStruct dict, logical-axes dict) for one shape cell."""
+        cfg = self.cfg
+        b = cell.global_batch
+        l = 1 if cell.kind == "decode" else cell.seq_len
+        specs: dict[str, Any] = {}
+        axes: dict[str, Any] = {}
+
+        if cfg.frontend == "tokens":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+            axes["tokens"] = ("batch", None)
+        else:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, l, cfg.d_model), jnp.bfloat16)
+            axes["embeds"] = ("batch", None, "embed")
+        if cfg.pos_type == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, b, l), jnp.int32)
+            axes["positions"] = (None, "batch", None)
+        if cfg.cross_attention:
+            specs["memory"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_mem_len, cfg.d_model), jnp.bfloat16
+            )
+            axes["memory"] = ("batch", None, "embed")
+
+        if cell.kind == "train":
+            if cfg.n_codebooks > 0:
+                specs["labels"] = jax.ShapeDtypeStruct(
+                    (b, l, cfg.n_codebooks), jnp.int32
+                )
+                axes["labels"] = ("batch", None, None)
+            else:
+                specs["labels"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+                axes["labels"] = ("batch", None)
+        elif cell.kind == "decode":
+            specs["index"] = jax.ShapeDtypeStruct((), jnp.int32)
+            axes["index"] = ()
+        return specs, axes
+
+    def _prefill_specs_for_cache(self, cell: ShapeCell) -> dict:
+        """Prefill input stand-ins whose cache matches the decode cell."""
+        prefill_cell = ShapeCell(
+            name=f"_cache_{cell.name}",
+            kind="prefill",
+            seq_len=cell.seq_len,
+            global_batch=cell.global_batch,
+        )
+        specs, _ = self.input_specs(prefill_cell)
+        return specs
+
+    def cache_specs(self, cell: ShapeCell):
+        """Abstract decode-state tree (full cache of cell.seq_len tokens)."""
+        specs = self._prefill_specs_for_cache(cell)
+        params_abs = self.abstract()
+        out = jax.eval_shape(
+            lambda p, b: self.prefill(p, b)[1], params_abs, specs
+        )
+        return out
+
+    def cache_axes(self, cell: ShapeCell, *, kv_shardable: bool = True):
+        """Logical axes tree matching cache_specs' structure.
+
+        kv_shardable=False (MQA archs on a wide model axis) switches the KV
+        cache layout from head-sharded to sequence-sharded ("kv_seq").
+        """
+        structure = jax.tree.structure(self.cache_specs(cell))
+        leaves = jax.tree.leaves(self.cache_specs(cell))
+        axes = [
+            _cache_leaf_axes(leaf, self.cfg, kv_shardable) for leaf in leaves
+        ]
+        return jax.tree.unflatten(structure, axes)
+
+    def init_cache(self, cell: ShapeCell, rng=None):
+        """Concrete zero-initialized decode state (smoke tests/examples)."""
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_specs(cell)
+        )
+
+
+def _cache_leaf_axes(leaf, cfg: ArchConfig, kv_shardable: bool):
+    """Assign logical axes to one decode-state leaf by shape pattern."""
+    shape = leaf.shape
+    nd = len(shape)
+    # KV caches: (steps, B, S, K, Dh) — attention families;
+    #            (groups, B, S, K, Dh) — hybrid shared attn;
+    #            (steps, B, S, K, 1)  — int8 KV scales.
+    if nd == 5 and shape[-1] in (cfg.head_dim, 1) and shape[-2] == cfg.n_kv_heads:
+        if kv_shardable and cfg.n_kv_heads > 1:
+            return ("layers", "serve_batch", None, "kv_heads", None)
+        return ("layers", "serve_batch", "kv_seq", None, None)
+    # Mamba ssd state: (groups, sub, B, H, P, N)
+    if (
+        cfg.family == "hybrid"
+        and nd == 6
+        and cfg.ssm_state
+        and shape[-1] == cfg.ssm_state
+    ):
+        return ("layers", None, "serve_batch", "ssm_heads", None, None)
+    # Mamba conv state: (groups, sub, B, K-1, conv_dim)
+    if cfg.family == "hybrid" and nd == 5 and shape[-2] == cfg.ssm_conv - 1:
+        return ("layers", None, "serve_batch", None, None)
+    if cfg.family == "ssm":
+        # mLSTM C: (groups, sub, B, H, Dv, Dk) / n: (groups, sub, B, H, Dk):
+        # batch at axis 2. sLSTM c/n/h/m: (groups, B, H, D): batch at axis 1.
+        if nd >= 5:
+            return tuple(["layers", None, "serve_batch"] + [None] * (nd - 3))
+        return tuple(["layers", "serve_batch"] + [None] * (nd - 2))
+    # Fallback: replicate.
+    return tuple([None] * nd)
+
+
+@functools.lru_cache(maxsize=None)
+def get_model(name: str, remat: str = "none", causal_mode: str = "triangle") -> Model:
+    from repro.configs import get_config
+
+    return Model(get_config(name), remat=remat, causal_mode=causal_mode)

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts layer (GShard-style grouped dispatch, EP over "model").
+
+Top-k routing with capacity-bounded dispatch/combine einsums. Tokens are
+processed in groups of ``group_size`` so the dispatch tensor
+(G, g, E, C) stays ~O(g²·cf) elements per group regardless of expert count
+(C ∝ g·k/E). Experts are sharded over the "model" mesh axis (expert
+parallelism as a sub-case of the tensor axis — DESIGN.md §6).
+
+Used by llama4-scout (16e top-1 + shared), llama4-maverick (128e top-1 +
+shared, every other layer) and qwen3-235b (128e top-8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDef
+
+
+def moe_param_defs(
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    n_shared: int,
+    activation: str,
+) -> dict:
+    """Parameter declarations for one MoE layer."""
+    e_axes3 = ("experts", "embed", "ffn")
+    e_axes3_t = ("experts", "ffn", "embed")
+    defs: dict = {
+        "router": ParamDef(
+            (d_model, n_experts), ("embed", None), init="scaled", dtype=jnp.float32
+        ),
+        "w_up": ParamDef((n_experts, d_model, d_ff), e_axes3, init="scaled"),
+        "w_down": ParamDef((n_experts, d_ff, d_model), e_axes3_t, init="scaled"),
+    }
+    if activation in ("swiglu", "geglu"):
+        defs["w_gate"] = ParamDef((n_experts, d_model, d_ff), e_axes3, init="scaled")
+    if n_shared > 0:
+        sh = {
+            "w_up": ParamDef((d_model, n_shared * d_ff), ("embed", "ffn"), init="scaled"),
+            "w_down": ParamDef((n_shared * d_ff, d_model), ("ffn", "embed"), init="scaled"),
+        }
+        if activation in ("swiglu", "geglu"):
+            sh["w_gate"] = ParamDef(
+                (d_model, n_shared * d_ff), ("embed", "ffn"), init="scaled"
+            )
+        defs["shared"] = sh
+    return defs
+
+
+def _expert_ffn(x: jax.Array, params: dict, activation: str) -> jax.Array:
+    """x: (E, C', d_model) per expert → (E, C', d_model)."""
+    up = jnp.einsum("ecd,edf->ecf", x, params["w_up"])
+    if activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("ecd,edf->ecf", x, params["w_gate"])
+        act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+        hidden = act * up
+    else:
+        hidden = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", hidden, params["w_down"])
+
+
+#: Capacity factors per mode. Training uses the GShard standard (drops are a
+#: regularizer); serving paths use a large factor so drops are effectively
+#: impossible (vLLM MoE semantics). A ragged group-matmul kernel would make
+#: serving exactly dropless without the capacity padding — noted in
+#: EXPERIMENTS.md §Perf as future work.
+TRAIN_CAPACITY_FACTOR = 1.25
+PREFILL_CAPACITY_FACTOR = 2.0
+DECODE_CAPACITY_FACTOR = 4.0
+
+
+def moe_layer(
+    x: jax.Array,  # (B, L, d_model)
+    params: dict,
+    *,
+    n_experts: int,
+    top_k: int,
+    activation: str,
+    group_size: int = 512,
+    capacity_factor: float = TRAIN_CAPACITY_FACTOR,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss)."""
+    b, l, d = x.shape
+    dtype = x.dtype
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    g = min(group_size, n_tok)
+    if n_tok % g:
+        raise ValueError(f"tokens {n_tok} must divide group size {g}")
+    n_groups = n_tok // g
+    capacity = max(
+        top_k, min(g, int(g * top_k * capacity_factor / n_experts))
+    )
+
+    xg = tokens.reshape(n_groups, g, d)  # (G, g, d)
+    logits = jnp.einsum(
+        "Ggd,de->Gge", xg.astype(jnp.float32), params["router"]
+    )  # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Load-balancing auxiliary loss (Switch §2.2): E * Σ_e f_e · p_e.
+    me = jnp.mean(probs, axis=1)  # (G, E) mean router prob
+    top1 = jnp.argmax(probs, axis=-1)
+    ce = jnp.mean(
+        jax.nn.one_hot(top1, n_experts, dtype=jnp.float32), axis=1
+    )  # (G, E) fraction dispatched
+    aux_loss = n_experts * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # Top-k expert choice per token.
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    combine = jnp.zeros((n_groups, g, n_experts, capacity), jnp.float32)
+    for slot in range(top_k):
+        e_idx = expert_idx[..., slot]  # (G, g)
+        e_oh = jax.nn.one_hot(e_idx, n_experts, dtype=jnp.float32)
+        # position of each token within its expert's capacity buffer
+        pos = jnp.cumsum(e_oh, axis=1) - 1.0  # (G, g, E)
+        pos_tok = jnp.sum(pos * e_oh, axis=-1)  # (G, g)
+        in_cap = pos_tok < capacity
+        gate = gate_vals[..., slot] * in_cap  # dropped tokens → 0 gate
+        pos_oh = jax.nn.one_hot(
+            jnp.where(in_cap, pos_tok, capacity).astype(jnp.int32),
+            capacity,
+            dtype=jnp.float32,
+        )  # (G, g, C)
+        combine = combine + jnp.einsum(
+            "Gg,Gge,Ggc->Ggec", gate, e_oh, pos_oh
+        )
+
+    dispatch = (combine > 0).astype(dtype)  # (G, g, E, C)
+    expert_in = jnp.einsum("Ggec,Ggd->Gecd", dispatch, xg)  # (G, E, C, d)
+    expert_in = constrain(expert_in, (None, "experts", None, None))
+
+    eo = jax.vmap(lambda xi: _expert_ffn(xi, params, activation))(expert_in)
+    eo = constrain(eo, (None, "experts", None, None))
+
+    out = jnp.einsum("Ggec,Gecd->Ggd", combine.astype(dtype), eo)
+
+    if "shared" in params:
+        sh = params["shared"]
+        if activation in ("swiglu", "geglu"):
+            gate = jnp.einsum("Ggd,df->Ggf", xg, sh["w_gate"])
+            up = jnp.einsum("Ggd,df->Ggf", xg, sh["w_up"])
+            a = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+            hidden = a * up
+        else:
+            hidden = jax.nn.gelu(jnp.einsum("Ggd,df->Ggf", xg, sh["w_up"]))
+        out = out + jnp.einsum("Ggf,fd->Ggd", hidden, sh["w_down"])
+
+    return out.reshape(b, l, d).astype(dtype), aux_loss.astype(jnp.float32)

@@ -1,0 +1,111 @@
+"""Spec-first parameter trees.
+
+Models declare parameters as a nested dict of :class:`ParamDef` (shape +
+logical sharding axes + init). From one declaration we derive:
+
+* ``init_params``     — materialized arrays (smoke tests, examples, training)
+* ``abstract_params`` — ShapeDtypeStruct tree (dry-run: no allocation)
+* ``param_axes``      — logical-axis tree → PartitionSpecs via AxisRules
+
+This keeps the model definition, its sharding, and its dry-run stand-ins in
+lockstep by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in)
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch"
+            )
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(rng: jax.Array, d: ParamDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "scaled":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = 1.0 / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(rng, d.shape, jnp.float32) * std).astype(d.dtype)
+    if d.init == "normal":
+        return (jax.random.normal(rng, d.shape, jnp.float32) * d.scale).astype(
+            d.dtype
+        )
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(defs: Any, rng: jax.Array) -> Any:
+    """Materialize a ParamDef tree into arrays (deterministic per-path keys)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    arrays = [_init_leaf(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(defs: Any) -> Any:
+    """ShapeDtypeStruct stand-ins (dry-run: zero allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def param_axes(defs: Any) -> Any:
+    """Tree of logical-axis tuples, aligned with the param tree."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def param_count(defs: Any) -> int:
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=is_def):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total
+
+
+def param_bytes(defs: Any) -> int:
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=is_def):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n * jnp.dtype(d.dtype).itemsize
+    return total
+
+
+def stack_defs(d: ParamDef, n: int, axis_name: Optional[str] = "layers") -> ParamDef:
+    """Prepend a stacking dimension (for lax.scan'd layer stacks)."""
+    return dataclasses.replace(
+        d, shape=(n, *d.shape), axes=(axis_name, *d.axes)
+    )
+
+
+def stack_tree(defs: Any, n: int, axis_name: Optional[str] = "layers") -> Any:
+    return jax.tree.map(
+        lambda d: stack_defs(d, n, axis_name), defs, is_leaf=is_def
+    )

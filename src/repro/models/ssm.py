@@ -1,0 +1,261 @@
+"""Mamba-2 (SSD) blocks in pure JAX (chunked scan; per-step decode).
+
+The chunked state-space-duality algorithm (Mamba-2): sequence is processed
+in chunks of Q tokens; within a chunk the recurrence is materialized as a
+(Q×Q) decay-masked attention-like product, between chunks a (H,P,N) state is
+carried by ``lax.scan``. This is also the pure-jnp oracle for
+``repro.kernels.ssd_scan``.
+
+Dimensions: B batch, L seq, H ssm heads, P head dim, G groups, N state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Core SSD scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) — positive (post-softplus)
+    a_neg: jax.Array,  # (H,) — negative continuous-time decay A
+    b_mat: jax.Array,  # (B, L, G, N)
+    c_mat: jax.Array,  # (B, L, G, N)
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N)). fp32 internally."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    heads_per_group = h // g
+    chunk = min(chunk, l)
+    if l % chunk:
+        raise ValueError(f"seq len {l} must divide chunk {chunk}")
+    nck = l // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    # log decay per step: log a_t = A * dt_t  (A negative)
+    log_a = a_neg.astype(jnp.float32)[None, None, :] * dtf  # (B, L, H)
+
+    # reshape to chunks
+    xc = xf.reshape(bsz, nck, chunk, h, p)
+    dtc = dtf.reshape(bsz, nck, chunk, h)
+    lac = log_a.reshape(bsz, nck, chunk, h)
+    bc = bf.reshape(bsz, nck, chunk, g, n)
+    cc = cf.reshape(bsz, nck, chunk, g, n)
+
+    # expand B,C to heads: head h belongs to group h // heads_per_group
+    def expand_groups(t):  # (B, nck, Q, G, N) -> (B, nck, Q, H, N)
+        return jnp.repeat(t, heads_per_group, axis=3)
+
+    bh = expand_groups(bc)
+    ch = expand_groups(cc)
+
+    cum = jnp.cumsum(lac, axis=2)  # (B, nck, Q, H) inclusive cumsum
+
+    if initial_state is None:
+        s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    # Pre-compute per-chunk quantities independent of the carried state.
+    # intra-chunk:  y_intra[i] = Σ_{j≤i} (C_i·B_j) exp(cum_i − cum_j) dt_j x_j
+    cb = jnp.einsum("bkihn,bkjhn->bkhij", ch, bh)  # (B,nck,H,Q,Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # cum_i - cum_j: (B,nck,Q,Q,H)
+    seg = jnp.moveaxis(seg, -1, 2)  # (B,nck,H,Q,Q)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, None], jnp.exp(seg), 0.0)
+    dtx = xc * dtc[..., None]  # (B,nck,Q,H,P)
+    y_intra = jnp.einsum("bkhij,bkjhp->bkihp", cb * decay, dtx)
+
+    # chunk-level aggregates for the inter-chunk recurrence
+    total = cum[:, :, -1, :]  # (B,nck,H) — log decay over the whole chunk
+    # state contribution of chunk k: Σ_j exp(total − cum_j) dt_j B_j x_j^T
+    w = jnp.exp(total[:, :, None, :] - cum)  # (B,nck,Q,H)
+    state_in = jnp.einsum("bkjhn,bkjhp,bkjh->bkhpn", bh, xc * dtc[..., None], w)
+    # cross-chunk read: y_cross[i] = (C_i · S_prev) exp(cum_i)
+    read_w = jnp.exp(cum)  # (B,nck,Q,H)
+
+    def body(s_prev, inputs):
+        y_in, s_add, tot, c_blk, r_w = inputs
+        y_cross = (
+            jnp.einsum("bihn,bhpn->bihp", c_blk, s_prev) * r_w[..., None]
+        )
+        s_new = jnp.exp(tot)[:, :, None, None] * s_prev + s_add
+        return s_new, y_in + y_cross
+
+    xs = (
+        jnp.moveaxis(y_intra, 1, 0),
+        jnp.moveaxis(state_in, 1, 0),
+        jnp.moveaxis(total, 1, 0),
+        jnp.moveaxis(ch, 1, 0),
+        jnp.moveaxis(read_w, 1, 0),
+    )
+    s_final, ys = jax.lax.scan(body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_step(
+    x_t: jax.Array,  # (B, H, P)
+    dt_t: jax.Array,  # (B, H)
+    a_neg: jax.Array,  # (H,)
+    b_t: jax.Array,  # (B, G, N)
+    c_t: jax.Array,  # (B, G, N)
+    state: jax.Array,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence: S ← a S + dt B x;  y = C·S."""
+    bsz, h, p = x_t.shape
+    g, n = b_t.shape[1], b_t.shape[2]
+    rep = h // g
+    bh = jnp.repeat(b_t, rep, axis=1)  # (B, H, N)
+    chh = jnp.repeat(c_t, rep, axis=1)
+    a = jnp.exp(a_neg.astype(jnp.float32)[None] * dt_t.astype(jnp.float32))
+    s_new = (
+        a[..., None, None] * state.astype(jnp.float32)
+        + (dt_t.astype(jnp.float32) * 1.0)[..., None, None]
+        * x_t.astype(jnp.float32)[..., None]
+        * bh.astype(jnp.float32)[:, :, None, :]
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", chh.astype(jnp.float32), s_new)
+    return y.astype(x_t.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (projections + conv + SSD + gate)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_param_defs(
+    d_model: int, d_inner: int, n_heads: int, d_state: int, d_conv: int
+) -> dict:
+    di_ax = ("embed", "ssm_heads")
+    return {
+        "w_z": ParamDef((d_model, d_inner), di_ax, init="scaled"),
+        "w_x": ParamDef((d_model, d_inner), di_ax, init="scaled"),
+        "w_b": ParamDef((d_model, d_state), ("embed", None), init="scaled"),
+        "w_c": ParamDef((d_model, d_state), ("embed", None), init="scaled"),
+        "w_dt": ParamDef((d_model, n_heads), ("embed", "ssm_heads"), init="scaled"),
+        "conv_x": ParamDef((d_conv, d_inner), (None, "ssm_heads"), init="scaled"),
+        "conv_b": ParamDef((d_conv, d_state), (None, None), init="scaled"),
+        "conv_c": ParamDef((d_conv, d_state), (None, None), init="scaled"),
+        "a_log": ParamDef((n_heads,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "d_skip": ParamDef((n_heads,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((n_heads,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "norm": ParamDef((d_inner,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "w_out": ParamDef((d_inner, d_model), ("ssm_heads", "embed"), init="scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array] = None):
+    """Depthwise causal conv along L. x (B,L,C), w (K,C).
+
+    Returns (y, new_cache) where cache holds the last K-1 inputs.
+    """
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    new_cache = xp[:, -(k - 1) :] if k > 1 else jnp.zeros_like(pad)
+    return y, new_cache
+
+
+def _ssm_gated_norm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float = 1e-6):
+    """RMSNorm(y * silu(z)) — the Mamba-2 gated output norm."""
+    h = y * jax.nn.silu(z)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    return ((hf * jax.lax.rsqrt(var + eps)) * (1.0 + w)).astype(y.dtype)
+
+
+def mamba2_block(
+    x: jax.Array,  # (B, L, d_model)
+    params: dict,
+    *,
+    n_heads: int,
+    head_dim: int,
+    d_state: int,
+    chunk: int = 128,
+    initial_state: Optional[dict] = None,
+) -> tuple[jax.Array, dict]:
+    """Full Mamba-2 mixer. Returns (out, {"conv": ..., "ssd": ...} state)."""
+    z = jnp.einsum("bld,de->ble", x, params["w_z"])
+    xs = jnp.einsum("bld,de->ble", x, params["w_x"])
+    bproj = jnp.einsum("bld,dn->bln", x, params["w_b"])
+    cproj = jnp.einsum("bld,dn->bln", x, params["w_c"])
+    dt = jnp.einsum("bld,dh->blh", x, params["w_dt"])
+
+    conv_state = (initial_state or {}).get("conv")
+    cx0 = conv_state[..., : xs.shape[-1]] if conv_state is not None else None
+    cb0 = (
+        conv_state[..., xs.shape[-1] : xs.shape[-1] + d_state]
+        if conv_state is not None
+        else None
+    )
+    cc0 = conv_state[..., xs.shape[-1] + d_state :] if conv_state is not None else None
+    xs, cx = _causal_conv(xs, params["conv_x"], cx0)
+    bproj, cb = _causal_conv(bproj, params["conv_b"], cb0)
+    cproj, cc = _causal_conv(cproj, params["conv_c"], cc0)
+    xs, bproj, cproj = jax.nn.silu(xs), jax.nn.silu(bproj), jax.nn.silu(cproj)
+
+    bsz, l, _ = x.shape
+    xh = xs.reshape(bsz, l, n_heads, head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["a_log"])
+
+    y, s_final = ssd_chunked(
+        xh,
+        dtp,
+        a_neg,
+        bproj[:, :, None, :],  # G = 1
+        cproj[:, :, None, :],
+        chunk=chunk,
+        initial_state=(initial_state or {}).get("ssd"),
+    )
+    y = y + xh * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, l, -1)
+    y = _ssm_gated_norm(y, z, params["norm"])
+    out = jnp.einsum("ble,ed->bld", y, params["w_out"])
+    new_state = {"conv": jnp.concatenate([cx, cb, cc], axis=-1), "ssd": s_final}
+    return out, new_state
+
+
+def mamba2_decode_step(
+    x_t: jax.Array,  # (B, 1, d_model)
+    params: dict,
+    state: dict,  # {"conv": (B, K-1, conv_dim), "ssd": (B, H, P, N)}
+    *,
+    n_heads: int,
+    head_dim: int,
+    d_state: int,
+) -> tuple[jax.Array, dict]:
+    """O(1) per-token recurrence for serving decode."""
+    out, new_state = mamba2_block(
+        x_t,
+        params,
+        n_heads=n_heads,
+        head_dim=head_dim,
+        d_state=d_state,
+        chunk=1,
+        initial_state=state,
+    )
+    return out, new_state

@@ -1,0 +1,322 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, recurrent) [arXiv:2405.04517].
+
+mLSTM recurrence per head (state C ∈ R^{dv×dk}, normalizer n ∈ R^{dk}):
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t · q_t|, 1)
+
+We use sigmoid forget gates and soft-capped exponential input gates
+(|ĩ| ≤ 5 via tanh cap) instead of the paper's running-max stabilizer —
+recorded in DESIGN.md §5; the fp32 normalizer keeps the chunkwise form
+numerically stable. The chunkwise algorithm mirrors
+:func:`repro.models.ssm.ssd_chunked` (same dual form).
+
+sLSTM keeps per-head-channel scalar state with recurrent gate connections
+(block-diagonal R), which forces a sequential ``lax.scan`` — the price of
+the sLSTM's state-tracking abilities, as the paper notes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+GATE_CAP = 5.0
+
+
+def _capped_exp_gate(pre: jax.Array) -> jax.Array:
+    """exp with tanh-capped preactivation (stability without running max)."""
+    return jnp.exp(GATE_CAP * jnp.tanh(pre.astype(jnp.float32) / GATE_CAP))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel + single step
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(
+    q: jax.Array,  # (B, L, H, Dk)
+    k: jax.Array,  # (B, L, H, Dk)
+    v: jax.Array,  # (B, L, H, Dv)
+    i_pre: jax.Array,  # (B, L, H) input-gate preactivation
+    f_pre: jax.Array,  # (B, L, H) forget-gate preactivation
+    *,
+    chunk: int = 128,
+    initial_state: Optional[tuple[jax.Array, jax.Array]] = None,  # (C, n)
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Returns (h (B,L,H,Dv), (C (B,H,Dv,Dk), n (B,H,Dk)))."""
+    bsz, l, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, l)
+    if l % chunk:
+        raise ValueError(f"seq len {l} must divide chunk {chunk}")
+    nck = l // chunk
+
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(dk))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    ig = _capped_exp_gate(i_pre)  # (B, L, H)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+
+    qc = qf.reshape(bsz, nck, chunk, h, dk)
+    kc = kf.reshape(bsz, nck, chunk, h, dk)
+    vc = vf.reshape(bsz, nck, chunk, h, dv)
+    ic = ig.reshape(bsz, nck, chunk, h)
+    lfc = log_f.reshape(bsz, nck, chunk, h)
+
+    cum = jnp.cumsum(lfc, axis=2)  # inclusive cumsum of log f
+
+    # intra-chunk: h_intra[t] = Σ_{j≤t} (q_t·k_j) exp(cum_t − cum_j) i_j v_j
+    qk = jnp.einsum("bkthd,bkjhd->bkhtj", qc, kc)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nck,t,j,H)
+    seg = jnp.moveaxis(seg, -1, 2)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, None], jnp.exp(seg), 0.0)
+    w = qk * decay * jnp.moveaxis(ic, -1, 2)[:, :, :, None, :]  # i_j on axis j
+    h_intra = jnp.einsum("bkhtj,bkjhv->bkthv", w, vc)
+    # intra normalizer: n_t·q_t = Σ_{j≤t} decay·i_j·(k_j·q_t) = Σ_j w[t,j]
+    norm_intra = jnp.einsum("bkhtj->bkth", w)
+
+    total = cum[:, :, -1, :]  # (B,nck,H)
+    state_w = jnp.exp(total[:, :, None, :] - cum) * ic  # (B,nck,Q,H)
+    c_in = jnp.einsum("bkjhv,bkjhd,bkjh->bkhvd", vc, kc, state_w)
+    n_in = jnp.einsum("bkjhd,bkjh->bkhd", kc, state_w)
+    read_w = jnp.exp(cum)  # (B,nck,Q,H)
+
+    if initial_state is None:
+        c0 = jnp.zeros((bsz, h, dv, dk), jnp.float32)
+        n0 = jnp.zeros((bsz, h, dk), jnp.float32)
+    else:
+        c0 = initial_state[0].astype(jnp.float32)
+        n0 = initial_state[1].astype(jnp.float32)
+
+    def body(carry, inputs):
+        c_prev, n_prev = carry
+        h_in, nm_in, c_add, n_add, tot, q_blk, r_w = inputs
+        h_cross = (
+            jnp.einsum("bthd,bhvd->bthv", q_blk, c_prev) * r_w[..., None]
+        )
+        nm_cross = jnp.einsum("bthd,bhd->bth", q_blk, n_prev) * r_w
+        dec = jnp.exp(tot)
+        c_new = dec[:, :, None, None] * c_prev + c_add
+        n_new = dec[:, :, None] * n_prev + n_add
+        h_num = h_in + h_cross
+        nm = nm_in + nm_cross
+        h_out = h_num / jnp.maximum(jnp.abs(nm), 1.0)[..., None]
+        return (c_new, n_new), h_out
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (h_intra, norm_intra, c_in, n_in, total, qc, read_w)
+    )
+    (c_f, n_f), hs = jax.lax.scan(body, (c0, n0), xs)
+    h_out = jnp.moveaxis(hs, 0, 1).reshape(bsz, l, h, dv)
+    return h_out.astype(v.dtype), (c_f, n_f)
+
+
+def mlstm_step(
+    q: jax.Array,  # (B, H, Dk)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, Dv)
+    i_pre: jax.Array,  # (B, H)
+    f_pre: jax.Array,
+    state: tuple[jax.Array, jax.Array],
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    c_prev, n_prev = state
+    dk = q.shape[-1]
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(dk))
+    ig = _capped_exp_gate(i_pre)
+    fg = jax.nn.sigmoid(f_pre.astype(jnp.float32))
+    c_new = (
+        fg[..., None, None] * c_prev
+        + ig[..., None, None]
+        * v.astype(jnp.float32)[..., :, None]
+        * k.astype(jnp.float32)[..., None, :]
+    )
+    n_new = fg[..., None] * n_prev + ig[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhvd->bhv", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)), 1.0)
+    return (num / den[..., None]).astype(v.dtype), (c_new, n_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — sequential scan
+# ---------------------------------------------------------------------------
+
+
+def slstm_scan(
+    z_pre: jax.Array,  # (B, L, H, D) cell-input preactivation
+    i_pre: jax.Array,  # (B, L, H, D)
+    f_pre: jax.Array,
+    o_pre: jax.Array,
+    r_z: jax.Array,  # (H, D, D) block-diagonal recurrent weights
+    r_i: jax.Array,
+    r_f: jax.Array,
+    r_o: jax.Array,
+    *,
+    initial_state: Optional[tuple] = None,  # (c, n, h, m)
+) -> tuple[jax.Array, tuple]:
+    """Stabilized exponential-gated scalar LSTM (per head-channel state)."""
+    bsz, l, h, d = z_pre.shape
+    if initial_state is None:
+        zeros = jnp.zeros((bsz, h, d), jnp.float32)
+        state0 = (zeros, zeros + 1e-6, zeros, zeros - 10.0)
+    else:
+        state0 = tuple(s.astype(jnp.float32) for s in initial_state)
+
+    def body(carry, x_t):
+        c, n, h_prev, m = carry
+        zp, ip, fp, op = x_t  # each (B, H, D)
+        # recurrent contributions (block-diagonal per head)
+        zr = jnp.einsum("bhd,hde->bhe", h_prev, r_z)
+        ir = jnp.einsum("bhd,hde->bhe", h_prev, r_i)
+        fr = jnp.einsum("bhd,hde->bhe", h_prev, r_f)
+        orr = jnp.einsum("bhd,hde->bhe", h_prev, r_o)
+        zt = jnp.tanh(zp + zr)
+        it_pre = ip + ir
+        ft_pre = fp + fr
+        # stabilizer: m_t = max(log f + m, log i)
+        log_f = jax.nn.log_sigmoid(ft_pre)
+        m_new = jnp.maximum(log_f + m, it_pre)
+        i_g = jnp.exp(it_pre - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * zt
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(op + orr) * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    seq = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+        for t in (z_pre, i_pre, f_pre, o_pre)
+    )
+    final, hs = jax.lax.scan(body, state0, seq)
+    return jnp.moveaxis(hs, 0, 1).astype(z_pre.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Block-level param defs (pre-up-projection mLSTM / post-up sLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block_defs(d_model: int, n_heads: int) -> dict:
+    d_in = 2 * d_model  # pf = 2 up-projection
+    hd = d_in // n_heads
+    return {
+        "norm": ParamDef((d_model,), ("embed",), init="zeros", dtype=jnp.float32),
+        "w_up": ParamDef((d_model, 2 * d_in), ("embed", "ffn"), init="scaled"),
+        # block-diagonal per-head q/k/v (xLSTM repo's qkv_proj_blocksize)
+        "w_q": ParamDef((n_heads, hd, hd), ("heads", None, None), init="scaled"),
+        "w_k": ParamDef((n_heads, hd, hd), ("heads", None, None), init="scaled"),
+        "w_v": ParamDef((n_heads, hd, hd), ("heads", None, None), init="scaled"),
+        "w_i": ParamDef((d_in, n_heads), (None, "heads"), init="scaled"),
+        "w_f": ParamDef((d_in, n_heads), (None, "heads"), init="scaled"),
+        "f_bias": ParamDef((n_heads,), ("heads",), init="ones", dtype=jnp.float32),
+        "skip": ParamDef((d_in,), ("ffn",), init="ones", dtype=jnp.float32),
+        "w_down": ParamDef((d_in, d_model), ("ffn", "embed"), init="scaled"),
+    }
+
+
+def slstm_block_defs(d_model: int, n_heads: int) -> dict:
+    hd = d_model // n_heads
+    # pf = 4/3 post-up MLP, rounded to a 128 multiple (TP-friendly)
+    d_up = (((4 * d_model) // 3 + 127) // 128) * 128
+    gates = {
+        f"w_{g}": ParamDef(
+            (d_model, n_heads, hd), (None, "heads", "head_dim"), init="scaled"
+        )
+        for g in ("z", "i", "f", "o")
+    }
+    recs = {
+        f"r_{g}": ParamDef((n_heads, hd, hd), ("heads", None, None), init="scaled")
+        for g in ("z", "i", "f", "o")
+    }
+    return {
+        "norm": ParamDef((d_model,), ("embed",), init="zeros", dtype=jnp.float32),
+        **gates,
+        **recs,
+        "w_o_proj": ParamDef((d_model, d_model), (None, "embed"), init="scaled"),
+        "mlp_norm": ParamDef((d_model,), ("embed",), init="zeros", dtype=jnp.float32),
+        "w_mlp_up": ParamDef((d_model, d_up), ("embed", "ffn"), init="scaled"),
+        "w_mlp_down": ParamDef((d_up, d_model), (("ffn"), "embed"), init="scaled"),
+    }
+
+
+def mlstm_block(
+    x: jax.Array,
+    params: dict,
+    *,
+    n_heads: int,
+    chunk: int = 128,
+    initial_state=None,
+    step: bool = False,
+):
+    """Pre-up-projection mLSTM block. Returns (out, state)."""
+    from repro.models.layers import rms_norm
+
+    bsz, l, d = x.shape
+    d_in = params["skip"].shape[0]
+    hd = d_in // n_heads
+    xn = rms_norm(x, params["norm"])
+    up = jnp.einsum("bld,de->ble", xn, params["w_up"])
+    u, zgate = jnp.split(up, 2, axis=-1)
+    uh = u.reshape(bsz, l, n_heads, hd)
+    q = jnp.einsum("blhe,hed->blhd", uh, params["w_q"])
+    k = jnp.einsum("blhe,hed->blhd", uh, params["w_k"])
+    v = jnp.einsum("blhe,hed->blhd", uh, params["w_v"])
+    ip = jnp.einsum("ble,eh->blh", u, params["w_i"])
+    fp = jnp.einsum("ble,eh->blh", u, params["w_f"]) + params["f_bias"]
+
+    if step:
+        h, state = mlstm_step(
+            q[:, 0], k[:, 0], v[:, 0], ip[:, 0], fp[:, 0], initial_state
+        )
+        h = h[:, None]
+    else:
+        h, state = mlstm_chunked(
+            q, k, v, ip, fp, chunk=chunk, initial_state=initial_state
+        )
+    h = h.reshape(bsz, l, d_in)
+    h = h + u * params["skip"].astype(h.dtype)
+    h = h * jax.nn.silu(zgate)
+    return x + jnp.einsum("ble,ed->bld", h, params["w_down"]), state
+
+
+def slstm_block(
+    x: jax.Array,
+    params: dict,
+    *,
+    n_heads: int,
+    initial_state=None,
+):
+    """Post-up-projection sLSTM block. Returns (out, state)."""
+    from repro.models.layers import rms_norm
+
+    bsz, l, d = x.shape
+    xn = rms_norm(x, params["norm"])
+    pre = {
+        g: jnp.einsum("bld,dhe->blhe", xn, params[f"w_{g}"])
+        for g in ("z", "i", "f", "o")
+    }
+    h, state = slstm_scan(
+        pre["z"],
+        pre["i"],
+        pre["f"],
+        pre["o"],
+        params["r_z"],
+        params["r_i"],
+        params["r_f"],
+        params["r_o"],
+        initial_state=initial_state,
+    )
+    h = h.reshape(bsz, l, d)
+    y = x + jnp.einsum("bld,de->ble", h, params["w_o_proj"])
+    # pf-4/3 MLP
+    yn = rms_norm(y, params["mlp_norm"])
+    hidden = jax.nn.gelu(jnp.einsum("bld,df->blf", yn, params["w_mlp_up"]))
+    return y + jnp.einsum("blf,fd->bld", hidden, params["w_mlp_down"]), state

@@ -1,0 +1,130 @@
+"""xLSTM model assembly: groups of (slstm_every−1) mLSTM blocks + 1 sLSTM.
+
+xlstm-350m: 24 blocks, sLSTM at every 8th position → 3 groups of
+(7 mLSTM + 1 sLSTM). Outer scan over groups, inner scan over mLSTM blocks.
+Decode state is O(1): per-layer (C, n) matrices for mLSTM and (c, n, h, m)
+scalars for sLSTM — no KV cache at any context length (the long_500k cell).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import heads as heads_lib
+from repro.models.params import ParamDef, stack_tree
+from repro.models.xlstm import (
+    mlstm_block,
+    mlstm_block_defs,
+    slstm_block,
+    slstm_block_defs,
+)
+
+
+def xlstm_defs(cfg: ArchConfig) -> dict:
+    k = cfg.slstm_every
+    if k < 2 or cfg.n_layers % k:
+        raise ValueError("n_layers must divide slstm_every (>=2)")
+    n_groups = cfg.n_layers // k
+    per_group_m = k - 1
+    return {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed")),
+        "mlstm": stack_tree(
+            stack_tree(mlstm_block_defs(cfg.d_model, cfg.n_heads), per_group_m, "sub"),
+            n_groups,
+        ),
+        "slstm": stack_tree(
+            slstm_block_defs(cfg.d_model, cfg.n_heads), n_groups
+        ),
+        "final_norm": ParamDef(
+            (cfg.d_model,), ("embed",), init="zeros", dtype=jnp.float32
+        ),
+        "lm_head": ParamDef(
+            (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), init="scaled"
+        ),
+    }
+
+
+def _group_scan(
+    params,
+    cfg: ArchConfig,
+    x,
+    *,
+    step: bool = False,
+    states: Optional[Any] = None,
+    remat: str = "none",
+):
+    def group_step(carry, xs):
+        h = carry
+        p_m, p_s, st = xs
+        m_states = None if st is None else st["mlstm"]
+        s_state = None if st is None else st["slstm"]
+
+        def run(h):
+            def mlstm_step_fn(hh, xs2):
+                p_blk, st_blk = xs2
+                out, new_st = mlstm_block(
+                    hh, p_blk, n_heads=cfg.n_heads,
+                    initial_state=st_blk, step=step,
+                )
+                return out, new_st
+
+            h2, new_m = jax.lax.scan(mlstm_step_fn, h, (p_m, m_states))
+            h2, new_s = slstm_block(
+                h2, p_s, n_heads=cfg.n_heads, initial_state=s_state
+            )
+            return h2, {"mlstm": new_m, "slstm": new_s}
+
+        if remat == "full":
+            run = jax.checkpoint(
+                run, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        h2, new_state = run(h)
+        return h2, new_state
+
+    x, new_states = jax.lax.scan(
+        group_step, x, (params["mlstm"], params["slstm"], states)
+    )
+    return x, new_states
+
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, ("batch", None, "embed"))
+
+
+def _finish(params, cfg: ArchConfig, x):
+    from repro.models.layers import rms_norm
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    vv = cfg.vocab if cfg.padded_vocab != cfg.vocab else None
+    return heads_lib.lm_logits(x, params["lm_head"], valid_vocab=vv)
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, remat: str = "none", **_):
+    x = _embed(params, cfg, batch["tokens"])
+    x, _ = _group_scan(params, cfg, x, remat=remat)
+    return _finish(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, remat: str = "none", **kw):
+    logits, _ = forward(params, cfg, batch, remat=remat)
+    loss, metrics = heads_lib.softmax_xent(logits, batch["labels"])
+    metrics["total_loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, **_):
+    x = _embed(params, cfg, batch["tokens"])
+    x, states = _group_scan(params, cfg, x)
+    return _finish(params, cfg, x[:, -1:])[:, 0], states
+
+
+def decode_step(params, cfg: ArchConfig, states: Any, batch: dict, **_):
+    x = _embed(params, cfg, batch["tokens"])
+    x, new_states = _group_scan(params, cfg, x, step=True, states=states)
+    return _finish(params, cfg, x)[:, 0], new_states

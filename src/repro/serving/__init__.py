@@ -1,0 +1,19 @@
+"""JAX serving engine: slot KV cache, continuous batching, two-pool server."""
+
+from repro.serving.engine import Completion, ServeRequest, ServingEngine
+from repro.serving.kv_cache import SlotAllocator, SlotKVCache, bucket_length
+from repro.serving.pool_server import ServedResponse, TwoPoolServer
+from repro.serving.sampler import SamplingParams, sample
+
+__all__ = [
+    "Completion",
+    "ServeRequest",
+    "ServingEngine",
+    "SlotAllocator",
+    "SlotKVCache",
+    "bucket_length",
+    "ServedResponse",
+    "TwoPoolServer",
+    "SamplingParams",
+    "sample",
+]

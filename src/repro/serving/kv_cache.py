@@ -1,0 +1,103 @@
+"""Slot-based KV cache management for the JAX serving engine.
+
+Each pool instance reserves ``n_seq`` slots of ``c_max`` tokens — precisely
+the provisioning rule of paper Eq. 1–2 (the quantity the short pool
+right-sizes). Model decode states live in a single batched pytree whose
+batch axis is the slot index; prefill results are inserted into a slot with
+``dynamic_update_slice`` along the per-leaf batch/seq axes derived from the
+model's logical cache axes.
+
+The block-table paged pool (``repro.kernels.paged_attention``) is the
+TPU-kernel-level counterpart; the slot layout here is its static-shape
+engine-level wrapper (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class SlotAllocator:
+    """Host-side free-list of sequence slots."""
+
+    n_slots: int
+
+    def __post_init__(self) -> None:
+        self.free: list[int] = list(range(self.n_slots))[::-1]
+        self.used: set[int] = set()
+
+    def alloc(self) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.pop()
+        self.used.add(slot)
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self.used:
+            raise ValueError(f"slot {slot} not allocated")
+        self.used.discard(slot)
+        self.free.append(slot)
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+
+class SlotKVCache:
+    """Batched decode-state tree with slot-indexed insertion."""
+
+    def __init__(self, model: Model, c_max: int, n_slots: int) -> None:
+        self.model = model
+        self.c_max = c_max
+        self.n_slots = n_slots
+        cell = ShapeCell(
+            name="serving", kind="decode", seq_len=c_max, global_batch=n_slots
+        )
+        self.cell = cell
+        self.state = model.init_cache(cell)
+        self.axes = model.cache_axes(cell)
+        # per-leaf batch axis = position of "serve_batch" in the logical axes
+        self.batch_axes = jax.tree.map(
+            lambda ax: ax.index("serve_batch") if "serve_batch" in ax else None,
+            self.axes,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+        # per-leaf seq axis (KV caches only): position of the c_max dim
+        self.vmap_axes = self.batch_axes
+
+    def insert_prefill(self, slot: int, prefill_state: Any) -> None:
+        """Write a single-sequence prefill state (batch dim 1) into a slot."""
+
+        def write(target, src, batch_axis):
+            if batch_axis is None:
+                return target
+            start = [0] * target.ndim
+            start[batch_axis] = slot
+            # pad the seq axis difference implicitly: dynamic_update_slice
+            # accepts a smaller update block.
+            return jax.lax.dynamic_update_slice(
+                target, src.astype(target.dtype), tuple(start)
+            )
+
+        self.state = jax.tree.map(
+            write, self.state, prefill_state, self.batch_axes
+        )
+
+    def update(self, new_state: Any) -> None:
+        self.state = new_state
+
+
+def bucket_length(n: int, *, multiple: int = 128, max_len: int = 1 << 20) -> int:
+    """Round a prompt length up to the next bucket (limits recompiles)."""
+    b = ((max(1, n) + multiple - 1) // multiple) * multiple
+    return min(b, max_len)

@@ -1,0 +1,29 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0  # 0 → greedy
+    top_k: int = 0  # 0 → no top-k filter
+
+
+def sample(
+    logits: jax.Array,  # (B, V)
+    rng: jax.Array,
+    params: SamplingParams = SamplingParams(),
+) -> jax.Array:
+    """Returns (B,) int32 token ids."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        kth = jax.lax.top_k(lf, params.top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)

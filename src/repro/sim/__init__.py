@@ -1,0 +1,46 @@
+"""Discrete-event simulator for fleet sizing / latency / reliability
+(paper Appendix A: instance DES, analytical profiler, fleet verification)."""
+
+from repro.sim.engine import InstanceSim
+from repro.sim.fleet import FleetResult, FleetSim, PoolSim, run_fleet
+from repro.sim.metrics import RequestRecord, SimSummary, percentile, summarize
+from repro.sim.profiler import (
+    HEADROOM,
+    FleetPlan,
+    PoolProfile,
+    mean_iterations,
+    plan_fleet,
+    profile_pool,
+    sensitivity_sweep,
+    split_by_budget,
+)
+from repro.sim.timing import (
+    A100_LLAMA3_70B,
+    MI300X_QWEN3,
+    TimingModel,
+    tpu_v5e_model,
+)
+
+__all__ = [
+    "InstanceSim",
+    "FleetResult",
+    "FleetSim",
+    "PoolSim",
+    "run_fleet",
+    "RequestRecord",
+    "SimSummary",
+    "percentile",
+    "summarize",
+    "HEADROOM",
+    "FleetPlan",
+    "PoolProfile",
+    "mean_iterations",
+    "plan_fleet",
+    "profile_pool",
+    "sensitivity_sweep",
+    "split_by_budget",
+    "A100_LLAMA3_70B",
+    "MI300X_QWEN3",
+    "TimingModel",
+    "tpu_v5e_model",
+]

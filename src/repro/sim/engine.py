@@ -1,0 +1,252 @@
+"""Instance-level discrete-event simulator (paper Appendix A, layer 1).
+
+Each vLLM-style engine is an *iteration-based continuous-batching server*:
+
+* every iteration processes one prefill chunk of up to ``C`` tokens plus one
+  decode token for every active-decoding sequence;
+* block-level KV accounting (16-token blocks) gates admission; exhaustion
+  during decode triggers vLLM-style preemption-by-recompute of the youngest
+  sequence;
+* iteration wall-clock time follows the linear-overhead roofline
+  ``t_iter = W + H · n_active``.
+
+The fleet layer (:mod:`repro.sim.fleet`) drives many instances plus the
+token-budget router; this module is single-instance and time is advanced by
+the caller, which makes it directly unit-testable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Optional
+
+from repro.core.pools import KV_BLOCK_TOKENS, PoolConfig, TOTAL_KV_BLOCKS
+from repro.core.router import Request
+from repro.sim.metrics import RequestRecord
+from repro.sim.timing import TimingModel
+
+
+@dataclasses.dataclass
+class _Seq:
+    """One in-flight sequence inside an instance."""
+
+    request: Request
+    enqueue_time: float
+    prefill_remaining: int
+    decode_remaining: int
+    generated: int = 0
+    blocks: int = 0
+    first_token_time: Optional[float] = None
+    preemptions: int = 0
+    truncated: bool = False
+
+    @property
+    def context_len(self) -> int:
+        done_prefill = self.request.true_input_tokens - self.prefill_remaining
+        return done_prefill + self.generated
+
+    @property
+    def decoding(self) -> bool:
+        return self.prefill_remaining == 0 and self.decode_remaining > 0
+
+
+def _blocks_for(tokens: int) -> int:
+    return max(1, math.ceil(tokens / KV_BLOCK_TOKENS))
+
+
+class InstanceSim:
+    """One serving instance with `pool.n_seq` slots and a KV block budget."""
+
+    def __init__(
+        self,
+        pool: PoolConfig,
+        timing: TimingModel,
+        *,
+        total_blocks: Optional[int] = None,
+        name: str = "instance",
+    ) -> None:
+        self.pool = pool
+        self.timing = timing
+        self.name = name
+        # The block budget reserves C_max tokens per slot (the paper's
+        # provisioning rule): n_seq slots x ceil(C_max/16) blocks.
+        if total_blocks is None:
+            total_blocks = min(
+                TOTAL_KV_BLOCKS, pool.n_seq * _blocks_for(pool.c_max)
+            )
+        self.total_blocks = total_blocks
+        self.blocks_free = total_blocks
+        self.queue: deque[tuple[Request, float]] = deque()
+        self.active: list[_Seq] = []
+        self.records: list[RequestRecord] = []
+        self.preemption_count = 0
+        self.rejection_count = 0
+        self.busy_time = 0.0
+        self._carried_preemptions: dict[int, int] = {}
+
+    # -- queue interface (fleet layer) ---------------------------------------
+    @property
+    def load(self) -> int:
+        return len(self.queue) + len(self.active)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    def submit(self, request: Request, now: float) -> bool:
+        """Enqueue a request; reject if the prompt alone exceeds C_max."""
+        if request.true_input_tokens >= self.pool.c_max:
+            self.rejection_count += 1
+            self.records.append(
+                RequestRecord(
+                    request_id=request.request_id,
+                    pool=self.pool.name,
+                    arrival=request.arrival_time,
+                    first_token=now,
+                    finish=now,
+                    output_tokens=0,
+                    rejected=True,
+                )
+            )
+            return False
+        self.queue.append((request, now))
+        return True
+
+    # -- admission ------------------------------------------------------------
+    def _try_admit(self, now: float) -> None:
+        while self.queue and len(self.active) < self.pool.n_seq:
+            request, enq = self.queue[0]
+            need = _blocks_for(request.true_input_tokens)
+            if need > self.total_blocks:
+                # can never fit, even on an empty instance → reject
+                self.queue.popleft()
+                self.rejection_count += 1
+                self.records.append(
+                    RequestRecord(
+                        request_id=request.request_id,
+                        pool=self.pool.name,
+                        arrival=request.arrival_time,
+                        first_token=now,
+                        finish=now,
+                        output_tokens=0,
+                        rejected=True,
+                    )
+                )
+                continue
+            if need > self.blocks_free:
+                break  # head-of-line: wait for blocks
+            self.queue.popleft()
+            self.blocks_free -= need
+            self.active.append(
+                _Seq(
+                    request=request,
+                    enqueue_time=enq,
+                    prefill_remaining=request.true_input_tokens,
+                    decode_remaining=request.true_output_tokens,
+                    blocks=need,
+                    preemptions=self._carried_preemptions.get(
+                        request.request_id, 0
+                    ),
+                )
+            )
+
+    # -- preemption (vLLM recompute mode: youngest victim) ---------------------
+    def _preempt_one(self) -> bool:
+        victims = [s for s in self.active if s.decoding]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda s: s.enqueue_time)
+        self.active.remove(victim)
+        self.blocks_free += victim.blocks
+        victim.blocks = 0
+        victim.preemptions += 1
+        self.preemption_count += 1
+        self._carried_preemptions[victim.request.request_id] = victim.preemptions
+        # Recompute mode: the sequence restarts prefill over prompt+generated.
+        req = victim.request
+        restart = dataclasses.replace(
+            req, true_input_tokens=req.true_input_tokens + victim.generated
+        )
+        # Re-queue at the front so it resumes promptly (vLLM behaviour).
+        self.queue.appendleft((restart, victim.enqueue_time))
+        return True
+
+    # -- one engine iteration ---------------------------------------------------
+    def step(self, now: float) -> tuple[float, list[RequestRecord]]:
+        """Run one iteration starting at `now`; returns (t_iter, completions)."""
+        self._try_admit(now)
+        if not self.active:
+            return 0.0, []
+
+        n_active = len(self.active)
+        t_iter = self.timing.iter_time(n_active)
+        end = now + t_iter
+        completed: list[RequestRecord] = []
+
+        # 1) One prefill chunk of up to C tokens (oldest prefilling sequence).
+        budget = self.timing.prefill_chunk
+        for seq in self.active:
+            if seq.prefill_remaining > 0 and budget > 0:
+                chunk = min(seq.prefill_remaining, budget)
+                seq.prefill_remaining -= chunk
+                budget -= chunk
+                # Blocks were reserved for the whole prompt at admission
+                # (the paper's point: chunking does NOT shrink KV footprint).
+                break  # a single chunk per iteration (Appendix A)
+
+        # 2) One decode token per active-decoding sequence. A sequence whose
+        # last prefill chunk landed this iteration emits its first token in
+        # the same iteration (prefill->decode fusion).
+        for seq in list(self.active):
+            if seq not in self.active:
+                continue  # evicted by an earlier sequence's preemption
+            if not seq.decoding:
+                continue
+            if seq.first_token_time is None:
+                seq.first_token_time = end
+            seq.generated += 1
+            seq.decode_remaining -= 1
+
+            # KV growth: a new block every KV_BLOCK_TOKENS generated tokens.
+            need = _blocks_for(seq.request.true_input_tokens + seq.generated)
+            while need > seq.blocks:
+                if self.blocks_free > 0:
+                    self.blocks_free -= 1
+                    seq.blocks += 1
+                else:
+                    # Try to free memory by preempting the youngest *other*
+                    # decoding sequence; if impossible, preempt self.
+                    if not self._preempt_one():
+                        break
+                    if seq not in self.active:  # we were the victim
+                        break
+
+            if seq not in self.active:
+                continue
+
+            # Context-window truncation (hits C_max mid-generation).
+            if seq.context_len >= self.pool.c_max and seq.decode_remaining > 0:
+                seq.truncated = True
+                seq.decode_remaining = 0
+
+            if seq.decode_remaining == 0:
+                self.active.remove(seq)
+                self.blocks_free += seq.blocks
+                completed.append(
+                    RequestRecord(
+                        request_id=seq.request.request_id,
+                        pool=self.pool.name,
+                        arrival=seq.request.arrival_time,
+                        first_token=seq.first_token_time or end,
+                        finish=end,
+                        output_tokens=seq.generated,
+                        preemptions=seq.preemptions,
+                        truncated=seq.truncated,
+                    )
+                )
+
+        self.records.extend(completed)
+        self.busy_time += t_iter
+        return t_iter, completed

@@ -1,0 +1,187 @@
+"""Fleet-level discrete-event simulation (paper Appendix A, layer 3).
+
+Drives N instances per pool plus the token-budget router over a trace:
+
+* arrivals are routed with Algorithm 1 (calibrated estimates + spillover,
+  reading live queue depths);
+* each instance runs the iteration-level engine of
+  :mod:`repro.sim.engine`; instance wake-ups are a single heapq;
+* responses feed ``usage.prompt_tokens`` back into the router's EMA.
+
+This verifies that the analytically-sized fleet (profiler layer) meets the
+SLO under Poisson arrivals — the "definitive numbers" path of the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional, Sequence
+
+from repro.core.calibration import EmaCalibrator
+from repro.core.pools import PoolConfig, PoolState
+from repro.core.router import Request, TokenBudgetRouter
+from repro.sim.engine import InstanceSim
+from repro.sim.metrics import RequestRecord, SimSummary, summarize
+from repro.sim.timing import TimingModel
+
+
+class PoolSim:
+    """A pool of identical instances with join-least-loaded dispatch."""
+
+    def __init__(
+        self, config: PoolConfig, num_instances: int, timing: TimingModel
+    ) -> None:
+        self.config = config
+        self.instances = [
+            InstanceSim(config, timing, name=f"{config.name}[{i}]")
+            for i in range(num_instances)
+        ]
+        self.state = PoolState(config=config, num_instances=num_instances)
+
+    def refresh_state(self) -> None:
+        self.state.queue_depth = sum(len(i.queue) for i in self.instances)
+        self.state.active = sum(len(i.active) for i in self.instances)
+
+    def least_loaded(self) -> InstanceSim:
+        return min(self.instances, key=lambda i: i.load)
+
+    @property
+    def records(self) -> list[RequestRecord]:
+        return [r for inst in self.instances for r in inst.records]
+
+    @property
+    def preemptions(self) -> int:
+        return sum(i.preemption_count for i in self.instances)
+
+    @property
+    def rejections(self) -> int:
+        return sum(i.rejection_count for i in self.instances)
+
+
+@dataclasses.dataclass
+class FleetResult:
+    summary: SimSummary
+    per_pool: dict[str, SimSummary]
+    router_stats: dict
+    preemptions: int
+    rejections: int
+
+
+class FleetSim:
+    """Token-budget-routed fleet (or a single homogeneous pool)."""
+
+    def __init__(
+        self,
+        pools: dict[str, tuple[PoolConfig, int]],
+        timing: TimingModel,
+        *,
+        b_short: int = 8192,
+        calibrator: Optional[EmaCalibrator] = None,
+        spillover: bool = True,
+    ) -> None:
+        self.pools = {
+            name: PoolSim(cfg, n, timing) for name, (cfg, n) in pools.items()
+        }
+        self.timing = timing
+        self.router: Optional[TokenBudgetRouter] = None
+        if "short" in self.pools and "long" in self.pools:
+            self.router = TokenBudgetRouter(
+                self.pools["short"].state,
+                self.pools["long"].state,
+                b_short=b_short,
+                calibrator=calibrator or EmaCalibrator(),
+                spillover=spillover,
+            )
+
+    # -- routing --------------------------------------------------------------
+    def _route(self, request: Request) -> PoolSim:
+        if self.router is None:
+            (pool,) = self.pools.values()
+            return pool
+        for p in self.pools.values():
+            p.refresh_state()
+        decision = self.router.route(request)
+        return self.pools[decision.pool]
+
+    # -- main loop --------------------------------------------------------------
+    def run(self, trace: Sequence[Request]) -> FleetResult:
+        # Wake-up heap over instances; counter breaks ties deterministically.
+        counter = itertools.count()
+        heap: list[tuple[float, int, InstanceSim]] = []
+        sleeping: set[int] = {id(i) for p in self.pools.values() for i in p.instances}
+
+        def wake(inst: InstanceSim, t: float) -> None:
+            if id(inst) in sleeping:
+                sleeping.discard(id(inst))
+                heapq.heappush(heap, (t, next(counter), inst))
+
+        arrivals = sorted(trace, key=lambda r: r.arrival_time)
+        lookup = {r.request_id: r for r in arrivals}
+        ai = 0
+        completions: list[RequestRecord] = []
+
+        while ai < len(arrivals) or heap:
+            next_arrival = arrivals[ai].arrival_time if ai < len(arrivals) else None
+            next_event = heap[0][0] if heap else None
+
+            if next_event is None or (
+                next_arrival is not None and next_arrival <= next_event
+            ):
+                request = arrivals[ai]
+                ai += 1
+                pool = self._route(request)
+                inst = pool.least_loaded()
+                if inst.submit(request, request.arrival_time):
+                    wake(inst, request.arrival_time)
+                continue
+
+            now, _, inst = heapq.heappop(heap)
+            t_iter, done = inst.step(now)
+            for rec in done:
+                completions.append(rec)
+                if self.router is not None and not rec.rejected:
+                    # usage.prompt_tokens feedback (Algorithm 1, line 15).
+                    req = lookup.get(rec.request_id)
+                    if req is not None:
+                        self.router.on_response(req, req.true_input_tokens)
+            if inst.idle:
+                sleeping.add(id(inst))
+            else:
+                heapq.heappush(heap, (now + max(t_iter, 1e-9), next(counter), inst))
+
+        # Collect rejected-record entries too (kept on the instances).
+        all_records = [r for p in self.pools.values() for r in p.records]
+        spills = self.router.spill_count if self.router else 0
+        per_pool = {
+            name: summarize(name, p.records, total_spills=0)
+            for name, p in self.pools.items()
+        }
+        return FleetResult(
+            summary=summarize("fleet", all_records, total_spills=spills),
+            per_pool=per_pool,
+            router_stats=self.router.stats() if self.router else {},
+            preemptions=sum(p.preemptions for p in self.pools.values()),
+            rejections=sum(p.rejections for p in self.pools.values()),
+        )
+
+
+def run_fleet(
+    trace: Sequence[Request],
+    pools: dict[str, tuple[PoolConfig, int]],
+    timing: TimingModel,
+    *,
+    b_short: int = 8192,
+    calibrator: Optional[EmaCalibrator] = None,
+    spillover: bool = True,
+) -> FleetResult:
+    """Convenience wrapper: build a FleetSim and run the trace."""
+    sim = FleetSim(
+        pools,
+        timing,
+        b_short=b_short,
+        calibrator=calibrator,
+        spillover=spillover,
+    )
+    return sim.run(trace)

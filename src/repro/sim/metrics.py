@@ -1,0 +1,109 @@
+"""Latency / reliability metrics for the DES (paper Tables 2–3)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0,100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    rank = max(0, min(len(s) - 1, math.ceil(q / 100.0 * len(s)) - 1))
+    return s[rank]
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request outcome recorded by the simulator."""
+
+    request_id: int
+    pool: str
+    arrival: float
+    first_token: float  # absolute time of first generated token
+    finish: float
+    output_tokens: int
+    preemptions: int = 0
+    truncated: bool = False
+    rejected: bool = False
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        if self.output_tokens <= 1:
+            return 0.0
+        return (self.finish - self.first_token) / (self.output_tokens - 1)
+
+
+@dataclasses.dataclass
+class SimSummary:
+    """Aggregate metrics (after warm-up discard) for one simulation run."""
+
+    name: str
+    num_requests: int
+    completed: int
+    rejected: int
+    truncated: int
+    preemptions: int
+    spills: int
+    ttft_p50: float
+    ttft_p99: float
+    tpot_p50: float
+    tpot_p99: float
+    makespan: float
+    throughput: float  # completed / makespan
+
+    @property
+    def success_rate(self) -> float:
+        if self.num_requests == 0:
+            return 1.0
+        return self.completed / self.num_requests
+
+    def meets_slo(self, ttft_p99: float = 2.0, tpot_p99: float = 0.080) -> bool:
+        """Paper SLO targets: P99 TTFT ≤ 2 s, P99 TPOT ≤ 80 ms."""
+        return self.ttft_p99 <= ttft_p99 and self.tpot_p99 <= tpot_p99
+
+
+def summarize(
+    name: str,
+    records: Sequence[RequestRecord],
+    *,
+    warmup_frac: float = 0.20,
+    total_spills: int = 0,
+) -> SimSummary:
+    """Aggregate with the paper's 20% warm-up discard (Appendix A)."""
+    if not records:
+        return SimSummary(name, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0.0, 0.0)
+
+    by_arrival = sorted(records, key=lambda r: r.arrival)
+    cut = int(len(by_arrival) * warmup_frac)
+    window = by_arrival[cut:]
+
+    done = [r for r in window if not r.rejected]
+    ttfts = [r.ttft for r in done]
+    tpots = [r.tpot for r in done if r.output_tokens > 1]
+    finish_times = [r.finish for r in done]
+    start = window[0].arrival if window else 0.0
+    makespan = (max(finish_times) - start) if finish_times else 0.0
+
+    return SimSummary(
+        name=name,
+        num_requests=len(window),
+        completed=len(done),
+        rejected=sum(1 for r in window if r.rejected),
+        truncated=sum(1 for r in window if r.truncated),
+        preemptions=sum(r.preemptions for r in window),
+        spills=total_spills,
+        ttft_p50=percentile(ttfts, 50),
+        ttft_p99=percentile(ttfts, 99),
+        tpot_p50=percentile(tpots, 50),
+        tpot_p99=percentile(tpots, 99),
+        makespan=makespan,
+        throughput=len(done) / makespan if makespan > 0 else 0.0,
+    )

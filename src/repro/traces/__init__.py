@@ -1,0 +1,22 @@
+"""Trace CDFs and synthetic request generation (paper Appendix A)."""
+
+from repro.traces.cdf import AZURE, LMSYS, TRACES, BucketCDF, describe, get_trace_cdf
+from repro.traces.generator import (
+    CATEGORY_MIX,
+    TraceSpec,
+    generate_trace,
+    short_fraction,
+)
+
+__all__ = [
+    "AZURE",
+    "LMSYS",
+    "TRACES",
+    "BucketCDF",
+    "describe",
+    "get_trace_cdf",
+    "CATEGORY_MIX",
+    "TraceSpec",
+    "generate_trace",
+    "short_fraction",
+]

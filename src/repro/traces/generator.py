@@ -1,0 +1,130 @@
+"""Synthetic trace generation (Appendix A "Trace generation").
+
+Requests arrive as a Poisson process at rate λ. Total-token counts come from
+the bucketed CDFs in :mod:`repro.traces.cdf`; the input/output split is a
+clipped normal. On top of the paper's recipe we synthesize the *routing
+observables*: a traffic category and a prompt byte length
+``|r| ≈ L_in · c_k`` with per-request noise, so the router's calibration
+loop (which never sees token counts, only bytes and usage feedback) can be
+evaluated end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.categories import (
+    BYTES_PER_TOKEN_STD,
+    TRUE_BYTES_PER_TOKEN,
+    Category,
+)
+from repro.core.router import Request
+from repro.traces.cdf import BucketCDF, get_trace_cdf
+
+#: Category mix per trace. Azure (enterprise API) is prose/code heavy;
+#: LMSYS (chat arena) has a large non-English share.
+CATEGORY_MIX: dict[str, dict[Category, float]] = {
+    "azure": {
+        Category.ENGLISH_PROSE: 0.55,
+        Category.SOURCE_CODE: 0.25,
+        Category.CJK_TEXT: 0.08,
+        Category.MIXED_OTHER: 0.12,
+    },
+    "lmsys": {
+        Category.ENGLISH_PROSE: 0.50,
+        Category.SOURCE_CODE: 0.12,
+        Category.CJK_TEXT: 0.22,
+        Category.MIXED_OTHER: 0.16,
+    },
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Everything needed to regenerate a trace deterministically."""
+
+    trace: str = "azure"
+    num_requests: int = 10_000
+    rate: float = 1000.0  # req/s Poisson arrival rate
+    seed: int = 42
+    cap_style: str = "exact"  # max_output_tokens: exact | padded | bucket
+
+
+def _sample_categories(
+    rng: np.random.Generator, trace: str, n: int
+) -> np.ndarray:
+    mix = CATEGORY_MIX[trace]
+    cats = np.array([int(k) for k in mix], dtype=np.int64)
+    probs = np.array([mix[k] for k in mix])
+    probs = probs / probs.sum()
+    return rng.choice(cats, size=n, p=probs)
+
+
+def _synth_bytes(
+    rng: np.random.Generator, l_in: np.ndarray, cats: np.ndarray
+) -> np.ndarray:
+    """|r| = L_in · c_true, with per-request ratio noise per category."""
+    c_mu = np.array([TRUE_BYTES_PER_TOKEN[Category(int(c))] for c in cats])
+    c_sd = np.array([BYTES_PER_TOKEN_STD[Category(int(c))] for c in cats])
+    c_req = np.maximum(0.5, rng.normal(c_mu, c_sd))
+    return np.maximum(1, np.round(l_in * c_req)).astype(np.int64)
+
+
+def _output_caps(
+    rng: np.random.Generator, l_out: np.ndarray, style: str
+) -> np.ndarray:
+    """The API-level max_output_tokens cap the router sees.
+
+    exact  — cap equals the realized output (paper's Table 2 setting);
+    padded — users over-ask by 1–2× (robustness studies);
+    bucket — round up to the next power of two ≥128 (UI presets).
+    """
+    if style == "exact":
+        return l_out
+    if style == "padded":
+        return np.maximum(1, np.round(l_out * rng.uniform(1.0, 2.0, len(l_out)))).astype(
+            np.int64
+        )
+    if style == "bucket":
+        caps = 2 ** np.ceil(np.log2(np.maximum(l_out, 128)))
+        return caps.astype(np.int64)
+    raise ValueError(f"unknown cap style {style!r}")
+
+
+def generate_trace(spec: TraceSpec) -> list[Request]:
+    """Deterministic synthetic trace of routing-layer requests."""
+    cdf: BucketCDF = get_trace_cdf(spec.trace)
+    rng = np.random.default_rng(spec.seed)
+    n = spec.num_requests
+
+    gaps = rng.exponential(1.0 / spec.rate, size=n)
+    arrivals = np.cumsum(gaps)
+    totals = cdf.sample_totals(rng, n)
+    l_in, l_out = cdf.sample_split(rng, totals)
+    cats = _sample_categories(rng, spec.trace, n)
+    byte_lens = _synth_bytes(rng, l_in, cats)
+    caps = _output_caps(rng, l_out, spec.cap_style)
+
+    return [
+        Request(
+            request_id=i,
+            byte_len=int(byte_lens[i]),
+            max_output_tokens=int(caps[i]),
+            category=int(cats[i]),
+            arrival_time=float(arrivals[i]),
+            true_input_tokens=int(l_in[i]),
+            true_output_tokens=int(l_out[i]),
+        )
+        for i in range(n)
+    ]
+
+
+def short_fraction(requests: Sequence[Request], b_short: int) -> float:
+    """Empirical α = fraction of requests with true total ≤ B_short."""
+    if not requests:
+        return 0.0
+    hits = sum(1 for r in requests if r.true_total <= b_short)
+    return hits / len(requests)

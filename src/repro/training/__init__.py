@@ -1,0 +1,39 @@
+"""Training substrate: optimizers, data pipeline, distributed train step."""
+
+from repro.training.data import DataConfig, SyntheticLM, make_batch_fn
+from repro.training.optimizer import (
+    AdafactorState,
+    AdamW,
+    AdamWState,
+    Adafactor,
+    clip_by_global_norm,
+    cosine_schedule,
+    get_optimizer,
+    global_norm,
+)
+from repro.training.train_loop import (
+    TrainConfig,
+    abstract_train_state,
+    init_train_state,
+    make_train_step,
+    opt_state_axes,
+)
+
+__all__ = [
+    "DataConfig",
+    "SyntheticLM",
+    "make_batch_fn",
+    "AdamW",
+    "AdamWState",
+    "Adafactor",
+    "AdafactorState",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "get_optimizer",
+    "global_norm",
+    "TrainConfig",
+    "abstract_train_state",
+    "init_train_state",
+    "make_train_step",
+    "opt_state_axes",
+]

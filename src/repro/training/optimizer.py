@@ -1,0 +1,190 @@
+"""Optimizers (pure JAX, no optax): AdamW and Adafactor, with schedules.
+
+AdamW is the default; Adafactor (factored second moment) is selectable for
+the very large MoE configs where full AdamW state exceeds per-chip HBM at
+the assigned mesh size (llama4-maverick: 3.2 TB of m/v over 256 chips —
+see EXPERIMENTS.md §Dry-run notes). Optimizer state inherits the parameter
+sharding (ZeRO-1-style: same NamedSharding tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(
+    step: jax.Array,
+    *,
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_frac: float = 0.1,
+) -> jax.Array:
+    warm = jnp.minimum((step + 1.0) / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak_lr * warm * (final_frac + (1 - final_frac) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Any  # fp32 first moment
+    nu: Any  # fp32 second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(
+        self, grads: Any, state: AdamWState, params: Any, lr: jax.Array
+    ) -> tuple[Any, AdamWState]:
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+
+        def moment1(m, g):
+            return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+        def moment2(v, g):
+            gf = g.astype(jnp.float32)
+            return b2 * v + (1 - b2) * jnp.square(gf)
+
+        mu = jax.tree.map(moment1, state.mu, grads)
+        nu = jax.tree.map(moment2, state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(count=count, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    count: jax.Array
+    vr: Any  # row stats (or full v for rank<2 leaves)
+    vc: Any  # col stats (zeros for rank<2 leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, shape: tuple[int, ...]) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params: Any) -> AdafactorState:
+        def row(p):
+            if self._factored(p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def col(p):
+            if self._factored(p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            count=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(row, params),
+            vc=jax.tree.map(col, params),
+        )
+
+    def update(
+        self, grads: Any, state: AdafactorState, params: Any, lr: jax.Array
+    ) -> tuple[Any, AdafactorState]:
+        count = state.count + 1
+        beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-self.decay)
+
+        def upd(p, g, vr, vc):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + self.eps
+            if self._factored(p.shape):
+                new_vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                new_vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = new_vr / jnp.maximum(
+                    jnp.mean(new_vr, axis=-1, keepdims=True), self.eps
+                )
+                step = gf / (
+                    jnp.sqrt(r)[..., None] * jnp.sqrt(new_vc)[..., None, :]
+                    + self.eps
+                )
+            else:
+                new_vr = beta * vr + (1 - beta) * g2
+                new_vc = vc
+                step = gf / (jnp.sqrt(new_vr) + self.eps)
+            # update clipping (RMS threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + self.eps)
+            step = step / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_vr, new_vc
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        vrflat = treedef.flatten_up_to(state.vr)
+        vcflat = treedef.flatten_up_to(state.vc)
+        out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat, gflat, vrflat, vcflat)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_vr = treedef.unflatten([o[1] for o in out])
+        new_vc = treedef.unflatten([o[2] for o in out])
+        return new_params, AdafactorState(count=count, vr=new_vr, vc=new_vc)
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

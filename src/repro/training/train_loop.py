@@ -1,0 +1,161 @@
+"""Distributed training step and loop.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch, step) →
+(params, opt_state, metrics) function that the dry-run lowers for the
+``train_4k`` cells and the examples run for real:
+
+* DP over ("pod","data"), TP over "model" via the logical-axis shardings;
+* optional microbatch gradient accumulation (``lax.scan`` over microbatches
+  — fewer collective rounds per optimizer step, the cheap form of gradient
+  "compression");
+* activation rematerialization on the scanned layer stacks (model-level
+  ``remat``);
+* global-norm clipping, cosine LR, donated params/opt_state buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+from repro.training.optimizer import (
+    AdamW,
+    clip_by_global_norm,
+    cosine_schedule,
+    get_optimizer,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"
+    weight_decay: float = 0.1
+    microbatches: int = 1  # gradient accumulation factor
+
+
+def make_train_step(
+    model: Model,
+    tcfg: TrainConfig = TrainConfig(),
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) → (p, s, metrics)."""
+    if tcfg.optimizer == "adamw":
+        opt = get_optimizer("adamw", weight_decay=tcfg.weight_decay)
+    else:
+        opt = get_optimizer(tcfg.optimizer)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        # microbatch accumulation: split the global batch along dim 0
+        def split(x):
+            b = x.shape[0]
+            if b % tcfg.microbatches:
+                raise ValueError("batch must divide microbatches")
+            return x.reshape(tcfg.microbatches, b // tcfg.microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(
+            lambda x: split(x) if hasattr(x, "shape") and x.ndim >= 1 else x,
+            batch,
+        )
+        # positions has a leading modality dim (3, B, L) — handle specially
+        if "positions" in batch:
+            p = batch["positions"]
+            micro["positions"] = jnp.moveaxis(split(jnp.moveaxis(p, 0, 1)), 1, 2)
+
+        zero_grads = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params
+        )
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / tcfg.microbatches,
+                acc,
+                grads,
+            )
+            return (acc, loss_acc + loss / tcfg.microbatches), None
+
+        (grads, loss), _ = jax.lax.scan(
+            body, (zero_grads, jnp.zeros((), jnp.float32)), micro
+        )
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = cosine_schedule(
+            step,
+            peak_lr=tcfg.peak_lr,
+            warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.total_steps,
+        )
+        new_params, new_state = opt.update(grads, opt_state, params, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_params, new_state, metrics
+
+    return train_step, opt
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, rng: jax.Array):
+    params = model.init(rng)
+    _, opt = make_train_step(model, tcfg)
+    return params, opt.init(params)
+
+
+def abstract_train_state(model: Model, tcfg: TrainConfig):
+    """ShapeDtypeStruct stand-ins for (params, opt_state) — dry-run path."""
+    params = model.abstract()
+    _, opt = make_train_step(model, tcfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    return params, opt_state
+
+
+def opt_state_axes(model: Model, tcfg: TrainConfig):
+    """Logical axes for the optimizer state (mirrors the param tree).
+
+    AdamW m/v inherit the param axes exactly; Adafactor row/col stats drop
+    the last / second-to-last axis respectively; counts are replicated.
+    """
+    from repro.training.optimizer import AdamWState
+
+    p_axes = model.axes()
+    if tcfg.optimizer == "adamw":
+        return AdamWState(count=(), mu=p_axes, nu=p_axes)
+    # adafactor
+    def row_axes(ax):
+        return ax[:-1] if len(ax) >= 2 else ax
+
+    def col_axes(ax):
+        return ax[:-2] + ax[-1:] if len(ax) >= 2 else ()
+
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x
+    )
+    from repro.training.optimizer import AdafactorState
+
+    return AdafactorState(
+        count=(),
+        vr=jax.tree.map(row_axes, p_axes, is_leaf=is_ax),
+        vc=jax.tree.map(col_axes, p_axes, is_leaf=is_ax),
+    )

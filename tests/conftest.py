@@ -1,0 +1,20 @@
+"""Test configuration.
+
+Smoke tests and benches must see the host's real (single) device — the
+512-device XLA flag belongs to the dry-run process only, never here.
+"""
+
+import os
+
+# Guard: if a stray environment leaked the dry-run flag, drop it so tests
+# exercise the single-device paths they're written for.
+if "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""):
+    del os.environ["XLA_FLAGS"]
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

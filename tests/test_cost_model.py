@@ -1,0 +1,107 @@
+"""Cost model (Eq. 1–2, 6–8) unit + property tests, incl. paper numbers."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    LLAMA3_70B_KV,
+    MI300X,
+    QWEN3_235B_KV,
+    closed_form_savings,
+    corrected_savings,
+    dual_fleet_naive,
+    homogeneous_fleet,
+    mi300x_case_study,
+    n_seq_for_cmax,
+)
+
+settings.register_profile("fast", max_examples=40, deadline=None)
+settings.load_profile("fast")
+
+
+class TestEq7:
+    def test_paper_examples(self):
+        """§3: α=0.80, ρ=4 → 60%; α=0.70, ρ=2 → 35%."""
+        assert closed_form_savings(0.80, 4.0) == pytest.approx(0.60)
+        assert closed_form_savings(0.70, 2.0) == pytest.approx(0.35)
+
+    @given(alpha=st.floats(0, 1), rho=st.floats(1.0, 64.0))
+    def test_bounds(self, alpha, rho):
+        s = closed_form_savings(alpha, rho)
+        assert 0.0 <= s < 1.0
+
+    @given(
+        alpha=st.floats(0.01, 1),
+        rho1=st.floats(1.0, 32.0),
+        rho2=st.floats(1.0, 32.0),
+    )
+    def test_monotone_in_rho(self, alpha, rho1, rho2):
+        lo, hi = sorted((rho1, rho2))
+        assert closed_form_savings(alpha, lo) <= closed_form_savings(
+            alpha, hi
+        ) + 1e-12
+
+    @given(rho=st.floats(1.0, 32.0), a1=st.floats(0, 1), a2=st.floats(0, 1))
+    def test_monotone_in_alpha(self, rho, a1, a2):
+        lo, hi = sorted((a1, a2))
+        assert closed_form_savings(lo, rho) <= closed_form_savings(hi, rho) + 1e-12
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError):
+            closed_form_savings(1.5, 2.0)
+        with pytest.raises(ValueError):
+            closed_form_savings(0.5, 0.0)
+
+
+class TestEq8:
+    @given(
+        rate=st.floats(10, 10_000),
+        alpha=st.floats(0.05, 0.95),
+        mu_s=st.floats(1.0, 100.0),
+        mu_h=st.floats(0.5, 50.0),
+    )
+    def test_corrected_never_beats_naive_when_long_is_slower(
+        self, rate, alpha, mu_s, mu_h
+    ):
+        """μ_Pl ≤ μ_homo ⇒ Eq. 8 fleet ≥ Eq. 6 fleet (the §4.2 gap)."""
+        mu_l = mu_h * 0.5
+        s8, g_homo, g8 = corrected_savings(rate, alpha, mu_s, mu_l, mu_h)
+        g6 = dual_fleet_naive(rate, alpha, mu_s, mu_h)
+        assert g8 >= g6
+
+    def test_homogeneous_fleet_rounds_up(self):
+        assert homogeneous_fleet(1000, 3.0, 1.08) == 360
+        assert homogeneous_fleet(1.0, 100.0) == 1
+
+
+class TestKVMath:
+    def test_block_budget_matches_paper_table1(self):
+        """Appendix A: N_seq 128 @ 8K, 64 @ 16K, 32 @ 32K, 16 @ 64K."""
+        assert n_seq_for_cmax(8192) == 128
+        assert n_seq_for_cmax(16_384) == 64
+        assert n_seq_for_cmax(32_768) == 32
+        assert n_seq_for_cmax(65_536, max_slots=16) == 16
+
+    def test_mi300x_case_study_exact(self):
+        """§4.7: 23.5 KB/token/GPU, 133.4 GB, 676 vs 169 (4×)."""
+        cs = mi300x_case_study()
+        assert cs.kv_kb_per_token_per_gpu == pytest.approx(23.5, abs=0.05)
+        assert cs.kv_budget_gb_per_gpu == pytest.approx(133.4, abs=0.1)
+        assert cs.n_seq_short == 676
+        assert cs.n_seq_long == 169
+        assert cs.concurrency_ratio == pytest.approx(4.0, abs=0.01)
+
+    def test_qwen3_kv_per_token(self):
+        """Eq. 1: 2·94·4·128·2 = 192.5 KB/token whole model."""
+        assert QWEN3_235B_KV.kv_bytes_per_token() == 2 * 94 * 4 * 128 * 2
+
+    @given(c1=st.integers(1024, 65_536), c2=st.integers(1024, 65_536))
+    def test_n_seq_monotone_decreasing_in_cmax(self, c1, c2):
+        lo, hi = sorted((c1, c2))
+        assert n_seq_for_cmax(lo) >= n_seq_for_cmax(hi)
+
+    @given(cmax=st.integers(256, 65_536))
+    def test_eq2_memory_nonnegative(self, cmax):
+        n = LLAMA3_70B_KV.n_seq_memory(MI300X, cmax)
+        assert n >= 0

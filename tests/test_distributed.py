@@ -1,0 +1,150 @@
+"""Distribution utilities: axis rules, compressed collectives, fault logic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import (
+    DEFAULT_RULES,
+    HealthMonitor,
+    StepTimer,
+    elastic_mesh,
+    largest_mesh_shape,
+    quantize_int8,
+    dequantize_int8,
+    make_compressed_grad_sync,
+)
+from repro.distributed.sharding import AxisRules
+
+
+def one_device_mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+class TestAxisRules:
+    def test_spec_basic(self):
+        mesh = one_device_mesh()
+        spec = DEFAULT_RULES.spec(("vocab", "embed"), mesh)
+        assert spec == P("model", None)
+
+    def test_missing_mesh_axis_drops(self):
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
+        spec = DEFAULT_RULES.spec(("batch", "embed"), mesh)
+        assert spec == P(None, None)  # ("pod","data") absent → replicated
+
+    def test_duplicate_mesh_axis_degrades_to_replication(self):
+        mesh = one_device_mesh()
+        rules = AxisRules(rules=(("a", "model"), ("b", "model")))
+        spec = rules.spec(("a", "b"), mesh)
+        assert spec == P("model", None)  # second use dropped
+
+    def test_unknown_logical_axis_replicates(self):
+        mesh = one_device_mesh()
+        assert DEFAULT_RULES.spec(("nonexistent",), mesh) == P(None)
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(128,)), jnp.float32)
+        q, s = quantize_int8(x)
+        err = jnp.abs(dequantize_int8(q, s) - x)
+        assert float(err.max()) <= float(s) * 0.5 + 1e-7
+
+    def test_error_feedback_is_unbiased_over_rounds(self):
+        """Σ compressed ≈ Σ true when the residual is carried (EF-SGD)."""
+        mesh = one_device_mesh()
+        sync = make_compressed_grad_sync(mesh, ("data",))
+        rng = np.random.default_rng(1)
+        err = {"w": jnp.zeros((64,), jnp.float32)}
+        total_true = np.zeros((64,))
+        total_comp = np.zeros((64,))
+        for _ in range(50):
+            g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+            mean, err = sync(g, err)
+            total_true += np.asarray(g["w"])
+            total_comp += np.asarray(mean["w"])
+        # residual is bounded by one quantization step, so the running sums
+        # track each other tightly
+        drift = np.abs(total_comp - total_true).max()
+        assert drift < 0.1
+
+    def test_wire_bytes_reduction(self):
+        x = jnp.asarray(np.random.default_rng(2).normal(size=(1024,)), jnp.float32)
+        q, s = quantize_int8(x)
+        assert q.dtype == jnp.int8  # 4× smaller than fp32 on the wire
+
+
+class TestFault:
+    def test_largest_mesh_shape(self):
+        assert largest_mesh_shape(512, model_parallel=16) == (32, 16)
+        assert largest_mesh_shape(496, model_parallel=16) == (31, 16)
+        with pytest.raises(ValueError):
+            largest_mesh_shape(8, model_parallel=16)
+
+    def test_elastic_mesh_single_device(self):
+        mesh = elastic_mesh(model_parallel=1)
+        assert mesh.devices.size == jax.device_count()
+
+    def test_health_monitor(self):
+        hm = HealthMonitor(timeout_s=10)
+        hm.heartbeat(0, now=100.0)
+        hm.heartbeat(1, now=100.0)
+        hm.heartbeat(2, now=95.0)
+        assert sorted(hm.alive_hosts(now=104.0)) == [0, 1, 2]
+        assert sorted(hm.alive_hosts(now=107.0)) == [0, 1]
+        hm.mark_dead(1)
+        assert sorted(hm.alive_hosts(now=104.0)) == [0, 2]
+
+    def test_step_timer_flags_stragglers(self):
+        st = StepTimer(window=16, multiplier=2.0)
+        for _ in range(16):
+            assert not st.record(1.0)
+        assert st.record(5.0)  # 5× median
+        assert not st.record(1.1)
+        assert st.straggler_rate > 0
+
+
+class TestElasticResumeEndToEnd:
+    def test_shrink_mesh_resume(self, tmp_path):
+        """Train → checkpoint → 'lose' devices → rebuild mesh → resume.
+
+        Single-host container: the re-mesh is 1→1 device, but the entire
+        code path (checkpoint → elastic_mesh → restore with new shardings →
+        continue training) is the production restart sequence.
+        """
+        from jax.sharding import NamedSharding
+        from repro.checkpoint import Checkpointer
+        from repro.configs import get_config
+        from repro.distributed.sharding import tree_shardings
+        from repro.models import Model
+        from repro.training import (
+            DataConfig, SyntheticLM, TrainConfig, init_train_state,
+            make_train_step, opt_state_axes,
+        )
+
+        cfg = get_config("granite-3-8b").reduced()
+        model = Model(cfg)
+        tcfg = TrainConfig(total_steps=8, warmup_steps=1)
+        step_fn, _ = make_train_step(model, tcfg)
+        jstep = jax.jit(step_fn)
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2))
+        params, opt = init_train_state(model, tcfg, jax.random.key(1))
+        for i in range(3):
+            b = jax.tree.map(jnp.asarray, data.batch(i))
+            params, opt, _ = jstep(params, opt, b, jnp.int32(i))
+        ck = Checkpointer(str(tmp_path))
+        ck.save(3, {"p": params, "o": opt})
+
+        # simulated failure → new (smaller) mesh → restore with its shardings
+        new_mesh = elastic_mesh(jax.devices(), model_parallel=1)
+        p_sh = tree_shardings(model.axes(), new_mesh)
+        o_sh = tree_shardings(opt_state_axes(model, tcfg), new_mesh)
+        state, _ = ck.restore(
+            {"p": params, "o": opt}, shardings={"p": p_sh, "o": o_sh}
+        )
+        p2, o2 = state["p"], state["o"]
+        b = jax.tree.map(jnp.asarray, data.batch(3))
+        p2, o2, m = jstep(p2, o2, b, jnp.int32(3))
+        assert np.isfinite(float(m["loss"]))

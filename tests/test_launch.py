@@ -1,0 +1,215 @@
+"""Launch layer: sharding policy, HLO parsing, analytic cost, dry-run records."""
+
+import glob
+import json
+import os
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import (
+    ALL_SHAPES,
+    ASSIGNED,
+    SHAPES_BY_NAME,
+    get_config,
+    shape_applicable,
+)
+from repro.launch.analytic_cost import cell_cost, forward_flops
+from repro.launch.hlo_parse import (
+    computation_multipliers,
+    parse_collectives,
+    shape_bytes,
+    split_computations,
+)
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(__file__)), "results", "dryrun")
+
+
+class TestPolicy:
+    """build_policy needs a mesh; construct lightweight stand-ins."""
+
+    def _policy(self, arch, shape, dp=16, mp=16, pod=1):
+        from unittest import mock
+        from repro.launch.policy import build_policy
+
+        cfg = get_config(arch)
+        cell = SHAPES_BY_NAME[shape]
+        mesh = mock.MagicMock()
+        shape_map = {"data": dp, "model": mp}
+        if pod > 1:
+            shape_map["pod"] = pod
+        mesh.shape = shape_map
+        mesh.axis_names = tuple(shape_map)
+        return cfg, cell, build_policy(cfg, cell, mesh)
+
+    @pytest.mark.parametrize("arch", [c.name for c in ASSIGNED])
+    @pytest.mark.parametrize("shape", list(SHAPES_BY_NAME))
+    def test_every_mapped_axis_divides(self, arch, shape):
+        """The policy never maps a logical axis a dim can't divide."""
+        cfg, cell, pol = self._policy(arch, shape)
+        rules = dict(pol.rules.rules)
+        msize = 16
+        if rules["heads"] == "model":
+            assert cfg.n_heads % msize == 0
+        if rules["kv_heads"] == "model":
+            assert cfg.n_kv_heads % msize == 0
+        if rules["experts"] == "model":
+            assert cfg.n_experts % msize == 0
+        if rules["vocab"] == "model":
+            assert cfg.padded_vocab % msize == 0
+        if rules["batch"] is not None:
+            assert cell.global_batch % 16 == 0
+
+    def test_long500k_replicates_batch_shards_seq(self):
+        _, _, pol = self._policy("zamba2-2.7b", "long_500k")
+        rules = dict(pol.rules.rules)
+        assert rules["serve_batch"] is None
+        assert rules["kv_seq"] == ("data", "model")
+        assert not pol.batch_sharded
+
+    def test_mqa_arch_seq_shards_cache(self):
+        _, _, pol = self._policy("gemma-2b", "decode_32k")
+        rules = dict(pol.rules.rules)
+        assert rules["kv_heads"] is None  # 1 kv head can't shard over 16
+        assert rules["kv_seq"] == "model"
+        assert not pol.kv_heads_sharded
+
+    def test_multi_pod_batch_uses_both_axes(self):
+        _, _, pol = self._policy("yi-6b", "train_4k", pod=2)
+        rules = dict(pol.rules.rules)
+        assert rules["batch"] == ("pod", "data")
+
+
+class TestHloParse:
+    HLO = """
+HloModule test
+
+%scan_body (x: f32[8,128]) -> f32[8,128] {
+  %p = f32[8,128]{1,0} parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %r = f32[8,128]{1,0} add(%ar, %ar)
+}
+
+%scan_cond (s: s32[]) -> pred[] {
+  %iv = s32[] parameter(0)
+  %limit = s32[] constant(32)
+  ROOT %lt = pred[] compare(%iv, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %ag = f32[32,128]{1,0} all-gather(%a), replica_groups={{0,1,2,3}}, dimensions={0}
+  %w = f32[8,128]{1,0} while(%a), condition=%scan_cond, body=%scan_body
+  ROOT %out = f32[8,128]{1,0} add(%w, %a)
+}
+"""
+
+    def test_shape_bytes(self):
+        assert shape_bytes("f32[8,128]") == 8 * 128 * 4
+        assert shape_bytes("bf16[2,4]") == 16
+        assert shape_bytes("pred[10]") == 10
+
+    def test_split_and_multipliers(self):
+        comps = split_computations(self.HLO)
+        assert {"scan_body", "scan_cond", "main"} <= set(comps)
+        mult = computation_multipliers(comps)
+        assert mult["main"] == 1
+        assert mult["scan_body"] == 32  # trip count from constant(32)
+
+    def test_collective_scaling(self):
+        stats = parse_collectives(self.HLO)
+        assert stats.counts["all-reduce"] == 1
+        assert stats.executed["all-reduce"] == 32  # inside the while
+        assert stats.counts["all-gather"] == 1
+        assert stats.executed["all-gather"] == 1
+        # ring model: AR = 2·(3/4)·bytes × 32 execs; AG = (3/4)·out_bytes
+        ar = 2 * 0.75 * 8 * 128 * 4 * 32
+        ag = 0.75 * 32 * 128 * 4
+        assert stats.wire_bytes_per_chip == pytest.approx(ar + ag)
+
+
+class TestAnalyticCost:
+    @pytest.mark.parametrize("arch", [c.name for c in ASSIGNED])
+    def test_flops_positive_all_applicable_cells(self, arch):
+        cfg = get_config(arch)
+        from repro.models import Model
+
+        n = Model(cfg).param_count()
+        for cell in ALL_SHAPES:
+            if not shape_applicable(cfg, cell):
+                continue
+            c = cell_cost(cfg, cell, n)
+            assert c.flops_total > 0
+            assert c.hbm_bytes > 0
+
+    def test_train_flops_close_to_6nd(self):
+        """Dense train ≈ 6·N·D × remat factor (4/3) + attention overhead."""
+        from repro.models import Model
+
+        cfg = get_config("yi-6b")
+        cell = SHAPES_BY_NAME["train_4k"]
+        n = Model(cfg).param_count()
+        c = cell_cost(cfg, cell, n, causal_mode="triangle")
+        model_flops = 6.0 * n * cell.global_batch * cell.seq_len
+        ratio = c.flops_total / model_flops
+        assert 1.2 < ratio < 2.2  # remat 4/3 + attention + head
+
+    def test_decode_memory_dominated_by_kv(self):
+        cfg = get_config("yi-6b")
+        cell = SHAPES_BY_NAME["decode_32k"]
+        from repro.models import Model
+
+        n = Model(cfg).param_count()
+        c = cell_cost(cfg, cell, n)
+        kv = c.detail["bytes"]["kv_cache_read"]
+        assert kv > 0.3 * c.hbm_bytes
+
+
+@pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "*.json")),
+    reason="dry-run records not generated (run repro.launch.dryrun --all)",
+)
+class TestDryRunMatrix:
+    """Deliverable (e): every (arch × shape × mesh) compiled or was a
+    documented sub-quadratic skip — on BOTH production meshes."""
+
+    def _records(self):
+        return [json.load(open(p)) for p in glob.glob(os.path.join(RESULTS, "*.json"))]
+
+    def test_all_cells_present_both_meshes(self):
+        recs = self._records()
+        seen = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
+        for cfg in ASSIGNED:
+            for shape in SHAPES_BY_NAME:
+                for mesh in ("pod16x16", "pod2x16x16"):
+                    assert (cfg.name, shape, mesh) in seen
+
+    def test_no_errors(self):
+        for r in self._records():
+            assert r["status"] in ("ok", "skipped"), (
+                r["arch"], r["shape"], r["mesh"], r.get("error"),
+            )
+
+    def test_skips_are_exactly_the_subquadratic_rule(self):
+        for r in self._records():
+            cfg = get_config(r["arch"])
+            cell = SHAPES_BY_NAME[r["shape"]]
+            if r["status"] == "skipped":
+                assert not shape_applicable(cfg, cell)
+            else:
+                assert shape_applicable(cfg, cell)
+
+    def test_ok_cells_have_roofline_terms(self):
+        for r in self._records():
+            if r["status"] != "ok":
+                continue
+            roof = r["roofline"]
+            assert roof["compute_s"] > 0
+            assert roof["memory_s"] > 0
+            assert roof["dominant"] in ("compute", "memory", "collective")
+            assert r["collectives"]["wire_bytes_per_chip"] >= 0

@@ -1,0 +1,238 @@
+"""Router + calibration: unit and property tests (Algorithm 1, §2)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    CalibState,
+    EmaCalibrator,
+    PoolState,
+    Request,
+    TokenBudgetRouter,
+    init_state,
+    jax_estimate_budget,
+    jax_route_batch,
+    jax_update_stream,
+    long_pool,
+    short_pool,
+)
+
+settings.register_profile("fast", max_examples=30, deadline=None)
+settings.load_profile("fast")
+
+
+def make_router(b_short=8192, spillover=True, queue_limit=4):
+    import dataclasses
+
+    s_cfg = dataclasses.replace(short_pool(), queue_limit=queue_limit)
+    return TokenBudgetRouter(
+        PoolState(config=s_cfg),
+        PoolState(config=long_pool()),
+        b_short=b_short,
+        spillover=spillover,
+    )
+
+
+class TestDispatch:
+    def test_short_request_goes_short(self):
+        r = make_router()
+        d = r.route(Request(0, byte_len=400, max_output_tokens=64, category=0))
+        assert d.pool == "short"
+
+    def test_long_output_cap_goes_long(self):
+        """'Short-prompt, long-generation' must go long (§2.1 'why total')."""
+        r = make_router()
+        d = r.route(Request(0, byte_len=800, max_output_tokens=8192, category=0))
+        assert d.pool == "long"
+
+    def test_hard_constraint_exceeds_short_cmax(self):
+        r = make_router()
+        d = r.route(
+            Request(0, byte_len=10_000_000, max_output_tokens=16, category=0)
+        )
+        assert d.pool == "long" and not d.spilled
+
+    def test_b_short_cannot_exceed_short_cmax(self):
+        with pytest.raises(ValueError):
+            TokenBudgetRouter(
+                PoolState(config=short_pool()),
+                PoolState(config=long_pool()),
+                b_short=100_000,
+            )
+
+    def test_spillover_redirects_on_overload(self):
+        r = make_router(queue_limit=2)
+        r.short.queue_depth = 100  # overloaded
+        d = r.route(Request(0, byte_len=400, max_output_tokens=16, category=0))
+        assert d.pool == "long" and d.spilled
+
+    def test_no_spillover_when_disabled(self):
+        r = make_router(queue_limit=2, spillover=False)
+        r.short.queue_depth = 100
+        d = r.route(Request(0, byte_len=400, max_output_tokens=16, category=0))
+        assert d.pool == "short"
+
+    def test_spillover_respects_hard_constraint(self):
+        """A long-pool request can never spill into a too-small short pool."""
+        r = make_router(queue_limit=2)
+        r.long.queue_depth = 10_000
+        d = r.route(
+            Request(0, byte_len=200_000, max_output_tokens=8192, category=0)
+        )
+        assert d.pool == "long"
+
+    @given(
+        byte_len=st.integers(1, 500_000),
+        max_out=st.integers(1, 32_768),
+        category=st.integers(0, 3),
+    )
+    def test_routing_invariant_no_spill(self, byte_len, max_out, category):
+        """Without load, pool == short iff estimate ≤ B_short (Algorithm 1)."""
+        r = make_router(spillover=False)
+        est = r.calibrator.estimate_total_budget(byte_len, max_out, category)
+        d = r.route(Request(0, byte_len, max_out, category))
+        if est > r.short.config.c_max or est > r.b_short:
+            assert d.pool == "long"
+        else:
+            assert d.pool == "short"
+        assert d.estimated_total == est
+
+
+class TestCalibration:
+    def test_cold_start_ratio(self):
+        c = EmaCalibrator()
+        assert c.conservative_ratio(0) == 4.0
+
+    def test_first_observation_replaces_prior(self):
+        c = EmaCalibrator()
+        c.observe(2000, 1000, 2)  # c_obs = 2.0
+        assert c.ratio[2] == pytest.approx(2.0)
+
+    @given(
+        true_c=st.floats(1.0, 8.0),
+        n=st.integers(30, 120),
+    )
+    def test_converges_to_true_ratio(self, true_c, n):
+        c = EmaCalibrator()
+        rng = np.random.default_rng(1)
+        for _ in range(n):
+            tokens = int(rng.integers(100, 4000))
+            c.observe(int(round(tokens * true_c)), tokens, 0)
+        assert abs(c.ratio[0] - true_c) / true_c < 0.05
+
+    def test_conservative_bias_direction(self):
+        """γσ>0 shifts the ratio down → token estimate up → safer pool."""
+        c = EmaCalibrator()
+        rng = np.random.default_rng(2)
+        for _ in range(100):
+            tokens = int(rng.integers(100, 4000))
+            noisy = tokens * (4.0 + rng.normal(0, 0.8))
+            c.observe(max(1, int(noisy)), tokens, 0)
+        assert c.sigma[0] > 0
+        assert c.conservative_ratio(0) < c.ratio[0]
+        est_cons = c.estimate_input_tokens(10_000, 0)
+        plain = int(np.ceil(10_000 / c.ratio[0]))
+        assert est_cons >= plain
+
+    def test_zero_prompt_tokens_ignored(self):
+        c = EmaCalibrator()
+        before = c.snapshot()
+        c.observe(1000, 0, 0)
+        assert c.snapshot() == before
+
+    @given(
+        obs=st.lists(
+            st.tuples(
+                st.integers(10, 100_000),  # bytes
+                st.integers(1, 20_000),  # prompt tokens
+                st.integers(0, 3),  # category
+            ),
+            min_size=1,
+            max_size=60,
+        )
+    )
+    def test_jax_matches_python(self, obs):
+        """The vectorized JAX EMA is bit-for-bit the host-side algorithm."""
+        py = EmaCalibrator()
+        for b, p, k in obs:
+            py.observe(b, p, k)
+        st_ = jax_update_stream(
+            init_state(),
+            jnp.array([o[0] for o in obs], jnp.float32),
+            jnp.array([o[1] for o in obs], jnp.float32),
+            jnp.array([o[2] for o in obs], jnp.int32),
+        )
+        np.testing.assert_allclose(
+            np.asarray(st_.ratio), np.asarray(py.ratio, np.float32), rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(st_.sigma), np.asarray(py.sigma, np.float32),
+            rtol=1e-3, atol=1e-4,
+        )
+
+    @given(
+        byte_lens=st.lists(st.integers(1, 300_000), min_size=1, max_size=40),
+    )
+    def test_jax_batch_routing_matches_host(self, byte_lens):
+        n = len(byte_lens)
+        max_out = [64] * n
+        cats = [0] * n
+        router = make_router(spillover=False)
+        host = [
+            router.route(Request(i, b, 64, 0)).pool == "long"
+            for i, b in enumerate(byte_lens)
+        ]
+        pools, _ = jax_route_batch(
+            init_state(),
+            jnp.array(byte_lens, jnp.int32),
+            jnp.array(max_out, jnp.int32),
+            jnp.array(cats, jnp.int32),
+        )
+        np.testing.assert_array_equal(np.asarray(pools) == 1, host)
+
+
+class TestAdaptiveThreshold:
+    """Error-driven threshold discovery (paper §7, beyond-paper feature)."""
+
+    def _c(self, **kw):
+        from repro.core.adaptive import AdaptiveThreshold
+
+        return AdaptiveThreshold(b_short=8192, b_min=512, **kw)
+
+    def test_errors_tighten_threshold(self):
+        c = self._c()
+        b = c.update(
+            window_requests=100, short_errors=5, short_queue=0,
+            short_instances=10, long_queue=0, long_instances=10,
+        )
+        assert b < 8192
+
+    def test_short_overload_tightens(self):
+        c = self._c()
+        b = c.update(
+            window_requests=100, short_errors=0, short_queue=500,
+            short_instances=10, long_queue=2, long_instances=10,
+        )
+        assert b < 8192
+
+    def test_quiet_window_relaxes_up_to_cmax(self):
+        c = self._c()
+        c.b_short = 4096
+        for _ in range(20):
+            c.update(
+                window_requests=100, short_errors=0, short_queue=0,
+                short_instances=10, long_queue=0, long_instances=10,
+            )
+        assert c.b_short == 8192  # clamped at short-pool C_max
+
+    def test_never_below_floor(self):
+        c = self._c()
+        for _ in range(50):
+            c.update(
+                window_requests=100, short_errors=50, short_queue=1000,
+                short_instances=1, long_queue=0, long_instances=10,
+            )
+        assert c.b_short >= 512

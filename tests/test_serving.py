@@ -1,0 +1,165 @@
+"""Serving engine + two-pool server integration tests."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import (
+    SamplingParams,
+    ServeRequest,
+    ServingEngine,
+    SlotAllocator,
+    TwoPoolServer,
+    bucket_length,
+)
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("granite-3-8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+class TestSlotAllocator:
+    @given(ops=st.lists(st.booleans(), max_size=40))
+    def test_alloc_release_invariants(self, ops):
+        alloc = SlotAllocator(4)
+        held = []
+        for do_alloc in ops:
+            if do_alloc:
+                s = alloc.alloc()
+                if len(held) < 4:
+                    assert s is not None and s not in held
+                    held.append(s)
+                else:
+                    assert s is None
+            elif held:
+                alloc.release(held.pop())
+            assert alloc.num_free == 4 - len(held)
+
+    def test_double_release_raises(self):
+        a = SlotAllocator(2)
+        s = a.alloc()
+        a.release(s)
+        with pytest.raises(ValueError):
+            a.release(s)
+
+
+class TestBucketing:
+    @given(n=st.integers(1, 100_000))
+    def test_bucket_covers_and_is_aligned(self, n):
+        b = bucket_length(n, multiple=128, max_len=1 << 17)
+        assert b % 128 == 0 or b == 1 << 17
+        assert b >= min(n, 1 << 17)
+
+
+class TestEngine:
+    def test_greedy_matches_full_forward(self, small_model):
+        cfg, model, params = small_model
+        prompt = list(np.random.default_rng(1).integers(0, cfg.vocab, 12))
+        eng = ServingEngine(model, params, c_max=64, n_slots=2, prompt_bucket=16)
+        eng.submit(ServeRequest(0, prompt, max_new_tokens=6))
+        comp = eng.run_to_completion()[0]
+        toks = list(prompt)
+        for _ in range(6):
+            logits, _ = model.forward(params, {"tokens": jnp.asarray(toks)[None]})
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        assert comp.output_tokens == toks[len(prompt):]
+
+    def test_concurrent_slots_isolated(self, small_model):
+        """Requests served together produce the same tokens as served alone."""
+        cfg, model, params = small_model
+        rng = np.random.default_rng(2)
+        prompts = [list(rng.integers(0, cfg.vocab, int(n))) for n in (8, 13, 21)]
+
+        solo = {}
+        for i, p in enumerate(prompts):
+            eng = ServingEngine(model, params, c_max=64, n_slots=1, prompt_bucket=16)
+            eng.submit(ServeRequest(i, p, max_new_tokens=4))
+            solo[i] = eng.run_to_completion()[0].output_tokens
+
+        eng = ServingEngine(model, params, c_max=64, n_slots=3, prompt_bucket=16)
+        for i, p in enumerate(prompts):
+            eng.submit(ServeRequest(i, p, max_new_tokens=4))
+        together = {
+            c.request_id: c.output_tokens for c in eng.run_to_completion()
+        }
+        assert together == solo
+
+    def test_queueing_beyond_slots(self, small_model):
+        cfg, model, params = small_model
+        eng = ServingEngine(model, params, c_max=64, n_slots=2, prompt_bucket=16)
+        rng = np.random.default_rng(3)
+        for i in range(7):
+            eng.submit(
+                ServeRequest(
+                    i, list(rng.integers(0, cfg.vocab, 10)), max_new_tokens=3
+                )
+            )
+        comps = eng.run_to_completion()
+        assert sorted(c.request_id for c in comps) == list(range(7))
+        assert all(len(c.output_tokens) == 3 for c in comps)
+
+    def test_prompt_over_cmax_rejected(self, small_model):
+        cfg, model, params = small_model
+        eng = ServingEngine(model, params, c_max=32, n_slots=2)
+        ok = eng.submit(ServeRequest(0, list(range(40)), max_new_tokens=3))
+        assert not ok and eng.rejections == 1
+
+    def test_usage_prompt_tokens_reported(self, small_model):
+        cfg, model, params = small_model
+        eng = ServingEngine(model, params, c_max=64, n_slots=2, prompt_bucket=16)
+        eng.submit(ServeRequest(0, list(range(1, 18)), max_new_tokens=2))
+        comp = eng.run_to_completion()[0]
+        assert comp.prompt_tokens == 17  # exact, independent of bucketing
+
+
+class TestTwoPoolServer:
+    def test_routing_and_feedback(self, small_model):
+        cfg, model, params = small_model
+        srv = TwoPoolServer(
+            model, params,
+            short_cmax=64, long_cmax=256, short_slots=4, long_slots=2,
+        )
+        rng = np.random.default_rng(4)
+        pools = {}
+        for i in range(10):
+            n = int(rng.integers(4, 30))
+            toks = list(rng.integers(0, cfg.vocab, n))
+            mx = 100 if i % 5 == 0 else int(rng.integers(2, 6))
+            pools[i] = srv.submit(i, toks, int(n * 4.4), mx)
+        resps = srv.run_to_completion()
+        assert len(resps) == 10
+        # long-output requests must be in the long pool (total-budget rule)
+        for i, pool in pools.items():
+            if i % 5 == 0:
+                assert pool == "long"
+        # calibration learned from usage feedback
+        stats = srv.stats()["router"]
+        assert stats["calibration"]["count"][0] > 0
+        ratio = stats["calibration"]["ratio"][0]
+        assert 3.5 < ratio < 5.5  # learned ≈ 4.4 bytes/token
+
+    def test_hard_miss_bounces_to_long(self, small_model):
+        """Estimate says short, prompt actually exceeds short c_max."""
+        cfg, model, params = small_model
+        srv = TwoPoolServer(
+            model, params,
+            short_cmax=32, long_cmax=256, short_slots=2, long_slots=2,
+            bytes_per_token_hint=40.0,  # wildly wrong → underestimates tokens
+        )
+        toks = list(range(1, 41))  # 40 tokens > short c_max 32
+        srv.submit(0, toks, prompt_bytes=160, max_output_tokens=2)
+        resps = srv.run_to_completion()
+        assert resps[0].pool == "long"
+        assert len(resps[0].output_tokens) == 2

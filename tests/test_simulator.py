@@ -1,0 +1,199 @@
+"""Discrete-event simulator: conservation, reliability, paper anchors."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.pools import PoolConfig, n_seq_for_cmax
+from repro.core.router import Request
+from repro.sim import (
+    A100_LLAMA3_70B,
+    InstanceSim,
+    TimingModel,
+    plan_fleet,
+    run_fleet,
+)
+from repro.traces import TraceSpec, generate_trace
+
+settings.register_profile("fast", max_examples=20, deadline=None)
+settings.load_profile("fast")
+
+FAST = TimingModel("fast", w_base=1e-3, h_per_seq=1e-4, prefill_chunk=512)
+
+
+def mk_request(i, t, l_in, l_out):
+    return Request(
+        request_id=i,
+        byte_len=l_in * 4,
+        max_output_tokens=l_out,
+        category=0,
+        arrival_time=t,
+        true_input_tokens=l_in,
+        true_output_tokens=l_out,
+    )
+
+
+class TestInstanceSim:
+    def test_single_request_completes(self):
+        pool = PoolConfig("p", 4096, 4)
+        inst = InstanceSim(pool, FAST)
+        inst.submit(mk_request(0, 0.0, 600, 5), 0.0)
+        t = 0.0
+        for _ in range(100):
+            dt, done = inst.step(t)
+            t += max(dt, 1e-9)
+            if done:
+                break
+        assert len(inst.records) == 1
+        rec = inst.records[0]
+        assert rec.output_tokens == 5
+        # 600 tokens → 2 prefill chunks; first token in chunk-2's iteration
+        assert rec.first_token > 0
+        assert rec.finish >= rec.first_token
+
+    def test_reject_oversized_prompt(self):
+        pool = PoolConfig("p", 1024, 4)
+        inst = InstanceSim(pool, FAST)
+        ok = inst.submit(mk_request(0, 0.0, 2000, 5), 0.0)
+        assert not ok
+        assert inst.rejection_count == 1
+        assert inst.records[0].rejected
+
+    def test_truncation_at_cmax(self):
+        pool = PoolConfig("p", 128, 2)
+        inst = InstanceSim(pool, FAST)
+        inst.submit(mk_request(0, 0.0, 100, 1000), 0.0)
+        t = 0.0
+        for _ in range(2000):
+            dt, done = inst.step(t)
+            t += max(dt, 1e-9)
+            if done:
+                break
+        rec = inst.records[0]
+        assert rec.truncated
+        assert 100 + rec.output_tokens <= 128
+
+    def test_block_accounting_never_negative(self):
+        pool = PoolConfig("p", 2048, 8)
+        inst = InstanceSim(pool, FAST)
+        for i in range(20):
+            inst.submit(mk_request(i, 0.0, 500, 50), 0.0)
+        t = 0.0
+        for _ in range(3000):
+            assert 0 <= inst.blocks_free <= inst.total_blocks
+            dt, _ = inst.step(t)
+            if inst.idle:
+                break
+            t += max(dt, 1e-9)
+        assert len([r for r in inst.records if not r.rejected]) == 20
+        assert inst.blocks_free == inst.total_blocks  # all freed
+
+    def test_preemption_under_block_pressure(self):
+        """Tiny block budget + growing decodes → vLLM-style preemption."""
+        pool = PoolConfig("p", 4096, 8)
+        inst = InstanceSim(pool, FAST, total_blocks=80)
+        for i in range(8):
+            inst.submit(mk_request(i, 0.0, 64, 400), 0.0)
+        t = 0.0
+        for _ in range(20_000):
+            dt, _ = inst.step(t)
+            if inst.idle:
+                break
+            t += max(dt, 1e-9)
+        done = [r for r in inst.records if not r.rejected]
+        assert len(done) == 8  # everyone eventually finishes
+        assert inst.preemption_count > 0  # but some were preempted
+
+    @given(
+        n=st.integers(1, 25),
+        seed=st.integers(0, 100),
+    )
+    def test_conservation(self, n, seed):
+        """Every submitted request is exactly once completed or rejected."""
+        import numpy as np
+
+        r = np.random.default_rng(seed)
+        pool = PoolConfig("p", 2048, 4)
+        inst = InstanceSim(pool, FAST)
+        for i in range(n):
+            inst.submit(
+                mk_request(
+                    i,
+                    float(r.uniform(0, 0.1)),
+                    int(r.integers(1, 3000)),
+                    int(r.integers(1, 50)),
+                ),
+                0.0,
+            )
+        t = 0.0
+        for _ in range(50_000):
+            dt, _ = inst.step(t)
+            if inst.idle:
+                break
+            t += max(dt, 1e-9)
+        ids = sorted(rec.request_id for rec in inst.records)
+        assert ids == list(range(n))
+        for rec in inst.records:
+            if not rec.rejected:
+                assert rec.finish >= rec.first_token >= 0
+
+
+class TestFleet:
+    def test_designed_fleet_zero_preemptions(self):
+        """§4.3: zero preemptions / rejections at designed sizes."""
+        reqs = generate_trace(
+            TraceSpec(trace="azure", num_requests=600, rate=50, seed=42)
+        )
+        plan = plan_fleet("azure", reqs, A100_LLAMA3_70B, 50.0)
+        short_cfg = PoolConfig(
+            "short", 8192, n_seq_for_cmax(8192), headroom=1.05
+        )
+        long_cfg = PoolConfig("long", 65_536, 16, headroom=1.02)
+        res = run_fleet(
+            reqs,
+            {
+                "short": (short_cfg, plan.short.instances),
+                "long": (long_cfg, plan.long.instances),
+            },
+            A100_LLAMA3_70B,
+        )
+        assert res.preemptions == 0
+        assert res.summary.success_rate == 1.0
+        assert res.summary.meets_slo()
+
+    def test_router_feedback_calibrates(self):
+        reqs = generate_trace(
+            TraceSpec(trace="azure", num_requests=400, rate=50, seed=1)
+        )
+        plan = plan_fleet("azure", reqs, A100_LLAMA3_70B, 50.0)
+        short_cfg = PoolConfig("short", 8192, 128, headroom=1.05)
+        long_cfg = PoolConfig("long", 65_536, 16, headroom=1.02)
+        res = run_fleet(
+            reqs,
+            {
+                "short": (short_cfg, plan.short.instances),
+                "long": (long_cfg, plan.long.instances),
+            },
+            A100_LLAMA3_70B,
+        )
+        calib = res.router_stats["calibration"]
+        assert all(c > 0 for c in calib["count"])  # every category observed
+
+    def test_paper_table1_throughputs(self):
+        """μ within 5% of Table 1: 3.0 / 13.5 / 0.4 (Azure)."""
+        reqs = generate_trace(
+            TraceSpec(trace="azure", num_requests=10_000, rate=1000, seed=42)
+        )
+        plan = plan_fleet("azure", reqs, A100_LLAMA3_70B, 1000.0)
+        assert plan.homogeneous.mu == pytest.approx(3.0, rel=0.05)
+        assert plan.short.mu == pytest.approx(13.5, rel=0.05)
+        assert plan.long.mu == pytest.approx(0.385, rel=0.1)
+
+    def test_paper_table2_savings(self):
+        """Savings within 1pp of Table 2: 16.6% Azure / 38.5% LMSYS."""
+        for trace, expected in (("azure", 0.166), ("lmsys", 0.385)):
+            reqs = generate_trace(
+                TraceSpec(trace=trace, num_requests=10_000, rate=1000, seed=42)
+            )
+            plan = plan_fleet(trace, reqs, A100_LLAMA3_70B, 1000.0)
+            assert plan.savings == pytest.approx(expected, abs=0.01)

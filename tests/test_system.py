@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests: the paper's system working as a whole."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import EmaCalibrator
+from repro.models import Model
+from repro.serving import TwoPoolServer
+from repro.sim import A100_LLAMA3_70B, plan_fleet
+from repro.traces import TraceSpec, generate_trace
+
+
+def test_paper_headline_claim():
+    """17–39% GPU reduction across the two traces (abstract)."""
+    savings = {}
+    for trace in ("azure", "lmsys"):
+        reqs = generate_trace(
+            TraceSpec(trace=trace, num_requests=10_000, rate=1000, seed=42)
+        )
+        savings[trace] = plan_fleet(trace, reqs, A100_LLAMA3_70B, 1000.0).savings
+    assert 0.16 <= savings["azure"] <= 0.20
+    assert 0.35 <= savings["lmsys"] <= 0.40
+
+
+def test_end_to_end_two_pool_serving_with_calibration():
+    """Real JAX engines + Algorithm-1 router + usage feedback, end to end.
+
+    The short-prompt/long-generation request must land in the long pool
+    (the paper's 'route on L_total' design rule), and every response's
+    usage.prompt_tokens must have fed the EMA.
+    """
+    cfg = get_config("yi-6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    srv = TwoPoolServer(
+        model, params,
+        short_cmax=64, long_cmax=256, short_slots=4, long_slots=2,
+        bytes_per_token_hint=4.0,
+    )
+    rng = np.random.default_rng(5)
+    n_req = 12
+    long_ids = set()
+    for i in range(n_req):
+        n = int(rng.integers(4, 30))
+        toks = list(rng.integers(0, cfg.vocab, n))
+        if i in (3, 7):  # short prompt, huge output cap
+            mx = 150
+            long_ids.add(i)
+        else:
+            mx = int(rng.integers(2, 6))
+        pool = srv.submit(i, toks, int(n * 4.4), mx)
+        if i in long_ids:
+            assert pool == "long"
+    resps = srv.run_to_completion()
+    assert len(resps) == n_req
+    assert all(len(r.output_tokens) >= 1 for r in resps)
+    counts = srv.stats()["router"]["calibration"]["count"]
+    assert sum(counts) == n_req
+
+
+def test_calibration_cross_category_isolation():
+    """CJK feedback must not disturb the prose ratio (per-category EMA)."""
+    cal = EmaCalibrator()
+    for _ in range(50):
+        cal.observe(4480, 1000, 0)  # prose: 4.48 B/tok
+        cal.observe(2010, 1000, 2)  # CJK: 2.01 B/tok
+    assert cal.ratio[0] == pytest.approx(4.48, rel=0.01)
+    assert cal.ratio[2] == pytest.approx(2.01, rel=0.01)
+    assert cal.ratio[1] == 4.0  # untouched category keeps the prior

@@ -1,0 +1,96 @@
+"""Trace CDFs and generation: properties + paper-anchored stats."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.traces import AZURE, LMSYS, TraceSpec, generate_trace, short_fraction
+
+settings.register_profile("fast", max_examples=40, deadline=None)
+settings.load_profile("fast")
+
+
+class TestBucketCDF:
+    @given(u=st.floats(0.0, 1.0))
+    def test_inverse_cdf_roundtrip(self, u):
+        for cdf in (AZURE, LMSYS):
+            x = cdf.inverse(u)
+            assert 0 <= x <= cdf.max_total
+            assert cdf.cdf(x) == pytest.approx(u, abs=1e-6)
+
+    @given(x1=st.floats(0, 70_000), x2=st.floats(0, 70_000))
+    def test_cdf_monotone(self, x1, x2):
+        lo, hi = sorted((x1, x2))
+        for cdf in (AZURE, LMSYS):
+            assert cdf.cdf(lo) <= cdf.cdf(hi) + 1e-12
+
+    def test_azure_paper_anchors(self):
+        """§1.1/§4.1: ~80% below 2K, ~92% below 8K, tail to 64K."""
+        assert AZURE.cdf(2048) == pytest.approx(0.80, abs=0.01)
+        assert AZURE.cdf(8192) == pytest.approx(0.92, abs=0.01)
+        assert AZURE.max_total == 65_536
+
+    def test_lmsys_paper_anchors(self):
+        """§4.1: mean total ≈ 69.5 + 214.5 = 284; virtually all below 8K."""
+        assert LMSYS.mean_total() == pytest.approx(284, rel=0.05)
+        assert LMSYS.cdf(8192) > 0.999
+
+    def test_conditional_mean_bounds(self):
+        m = AZURE.mean_total_conditional(0, 8192)
+        assert 0 < m <= 8192
+        m2 = AZURE.mean_total_conditional(8192, 65_536)
+        assert 8192 < m2 <= 65_536
+
+
+class TestGenerator:
+    def test_deterministic(self):
+        a = generate_trace(TraceSpec(num_requests=100, seed=7))
+        b = generate_trace(TraceSpec(num_requests=100, seed=7))
+        assert [r.byte_len for r in a] == [r.byte_len for r in b]
+        assert [r.arrival_time for r in a] == [r.arrival_time for r in b]
+
+    def test_arrivals_sorted_and_rate(self):
+        reqs = generate_trace(TraceSpec(num_requests=5000, rate=500, seed=0))
+        times = [r.arrival_time for r in reqs]
+        assert times == sorted(times)
+        measured = len(reqs) / times[-1]
+        assert measured == pytest.approx(500, rel=0.1)
+
+    @given(seed=st.integers(0, 50))
+    def test_fields_valid(self, seed):
+        reqs = generate_trace(TraceSpec(num_requests=50, seed=seed))
+        for r in reqs:
+            assert r.byte_len >= 1
+            assert r.true_input_tokens >= 1
+            assert r.true_output_tokens >= 1
+            assert r.max_output_tokens >= 1
+            assert 0 <= r.category <= 3
+            assert r.true_total <= 65_536 + 1
+
+    def test_lmsys_mean_lengths(self):
+        """Paper §4.1: mean L_in=69.5, L_out=214.5 (±15%)."""
+        reqs = generate_trace(
+            TraceSpec(trace="lmsys", num_requests=20_000, seed=3)
+        )
+        mean_in = np.mean([r.true_input_tokens for r in reqs])
+        mean_out = np.mean([r.true_output_tokens for r in reqs])
+        assert mean_in == pytest.approx(69.5, rel=0.2)
+        assert mean_out == pytest.approx(214.5, rel=0.15)
+
+    def test_azure_alpha(self):
+        """§4.2: α ≈ 0.92 at B_short=8192."""
+        reqs = generate_trace(TraceSpec(trace="azure", num_requests=20_000, seed=3))
+        assert short_fraction(reqs, 8192) == pytest.approx(0.917, abs=0.01)
+
+    def test_cap_styles(self):
+        for style in ("exact", "padded", "bucket"):
+            reqs = generate_trace(
+                TraceSpec(num_requests=200, seed=1, cap_style=style)
+            )
+            for r in reqs:
+                assert r.max_output_tokens >= min(r.true_output_tokens, 128) or (
+                    style == "exact"
+                )
+        exact = generate_trace(TraceSpec(num_requests=200, seed=1))
+        assert all(r.max_output_tokens == r.true_output_tokens for r in exact)
