@@ -14,6 +14,9 @@ Modules:
   reliability         — §4.3 preemptions/rejections + fault isolation
   dispatch_overhead   — §2.2 O(1) sub-microsecond dispatch
   roofline            — §Roofline table from dry-run records
+  sim_throughput      — reference vs vectorized DES backend speedup
+
+Exits non-zero when any module fails (CI gates on this).
 """
 
 from __future__ import annotations
@@ -32,6 +35,7 @@ def main() -> None:
         fig6_sensitivity,
         reliability,
         roofline,
+        sim_throughput,
         table1_pools,
         table2_cost,
         table3_latency,
@@ -54,6 +58,7 @@ def main() -> None:
         beyond_paper_threepool,
         beyond_paper_adaptive,
         roofline,
+        sim_throughput,
     ]
     failed = 0
     for mod in modules:

@@ -27,6 +27,7 @@ borderline requests go to the safer long pool).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import NamedTuple
 
@@ -95,6 +96,58 @@ class EmaCalibrator:
             "count": list(self.count),
         }
 
+    # -- batch feedback (vectorized simulator / trace re-routing) -----------
+    def to_state(self) -> "CalibState":
+        """Export the scalar EMA state as a JAX :class:`CalibState` pytree."""
+        return CalibState(
+            ratio=jnp.asarray(self.ratio, dtype=jnp.float32),
+            sigma=jnp.asarray(self.sigma, dtype=jnp.float32),
+            count=jnp.asarray(self.count, dtype=jnp.int32),
+        )
+
+    def load_state(self, state: "CalibState") -> None:
+        """Sync the scalar state back from a :class:`CalibState` pytree."""
+        self.ratio = [float(x) for x in state.ratio]
+        self.sigma = [float(x) for x in state.sigma]
+        self.count = [int(x) for x in state.count]
+
+    def observe_batch(
+        self,
+        byte_lens,
+        prompt_tokens,
+        categories,
+        *,
+        chunk: int = 4096,
+    ) -> None:
+        """Fold a whole observation stream through the EMA (Eq. 4) at once.
+
+        Epoch-batched feedback for the vectorized fleet backend: instead of
+        one :meth:`observe` call per response on the hot path, completions
+        are accumulated and folded through :func:`jax_update_stream`
+        (a jitted ``lax.scan``), then synced back into the scalar state.
+        Streams are padded to a fixed ``chunk`` length (padding rows carry
+        ``prompt_tokens=0``, which the update kernel skips) so JAX compiles
+        the scan exactly once.
+        """
+        byte_lens = jnp.asarray(byte_lens, dtype=jnp.float32)
+        prompt_tokens = jnp.asarray(prompt_tokens, dtype=jnp.float32)
+        categories = jnp.asarray(categories, dtype=jnp.int32)
+        n = int(byte_lens.shape[0])
+        if n == 0:
+            return
+        state = self.to_state()
+        for lo in range(0, n, chunk):
+            b = byte_lens[lo : lo + chunk]
+            p = prompt_tokens[lo : lo + chunk]
+            k = categories[lo : lo + chunk]
+            pad = chunk - int(b.shape[0])
+            if pad:
+                b = jnp.pad(b, (0, pad))
+                p = jnp.pad(p, (0, pad))  # prompt_tokens=0 → skipped
+                k = jnp.pad(k, (0, pad))
+            state = jax_update_stream(state, b, p, k, beta=self.beta)
+        self.load_state(state)
+
 
 # ---------------------------------------------------------------------------
 # Pure-functional JAX version (vectorized studies / fused batch routing)
@@ -149,6 +202,7 @@ def jax_update(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("beta",))
 def jax_update_stream(
     state: CalibState,
     byte_lens: jax.Array,
@@ -157,7 +211,12 @@ def jax_update_stream(
     *,
     beta: float = DEFAULT_BETA,
 ) -> CalibState:
-    """Fold a whole observation stream through the EMA with lax.scan."""
+    """Fold a whole observation stream through the EMA with lax.scan.
+
+    Jitted with ``beta`` static so repeated same-shape calls (the
+    fixed-chunk batches of :meth:`EmaCalibrator.observe_batch`) hit the
+    compilation cache instead of retracing the scan.
+    """
 
     def step(carry: CalibState, obs):
         b, p, k = obs

@@ -20,6 +20,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.calibration import (
     DEFAULT_GAMMA,
@@ -122,6 +123,71 @@ class TokenBudgetRouter:
     # -- feedback (Algorithm 1 lines 15–19) ---------------------------------
     def on_response(self, request: Request, prompt_tokens: int) -> None:
         self.calibrator.observe(request.byte_len, prompt_tokens, request.category)
+
+    def on_response_batch(self, byte_lens, prompt_tokens, categories) -> None:
+        """Epoch-batched feedback: fold many responses through the EMA at
+        once (vectorized fleet backend / trace re-simulation)."""
+        self.calibrator.observe_batch(byte_lens, prompt_tokens, categories)
+
+    def route_decided(self, pool_id: int, budget: int) -> str:
+        """Finalize one batched decision against live pool state.
+
+        Replays the load-dependent tail of Algorithm 1 (hard-constraint
+        override and spillover, lines 8–14) for a static short/long choice
+        produced by :meth:`route_batch`, updating the routed/spill counters
+        exactly like :meth:`route`. Returns the target pool name.
+        """
+        if not self.short.config.admits(budget):
+            # Beyond short C_max → long pool, no spill (as in route()).
+            self.routed["long"] += 1
+            return "long"
+        target, alternate = (
+            (self.short, self.long)
+            if pool_id == SHORT
+            else (self.long, self.short)
+        )
+        if (
+            self.spillover
+            and target.overloaded
+            and not alternate.overloaded
+            and alternate.config.admits(budget)
+        ):
+            target = alternate
+            self.spill_count += 1
+        name = target.config.name
+        self.routed[name] += 1
+        return name
+
+    # -- batch dispatch (vectorized fleet backend) ---------------------------
+    def route_batch(self, byte_lens, max_output_tokens, categories):
+        """Route a whole arrival batch with :func:`jax_route_batch`.
+
+        Returns ``(pool_ids, budgets)`` as NumPy arrays (0=short, 1=long).
+        The static decision uses the calibrator state as of the call —
+        load-dependent spillover and the routed/spill counters stay with the
+        caller, which sees live queue depths at each arrival's actual
+        dispatch time.
+        """
+        n = len(byte_lens)
+        # Pad to the next power of two so JAX compiles the routing kernel
+        # for a handful of shapes instead of one per ragged final epoch.
+        padded = 1 << max(0, (n - 1).bit_length())
+        pad = padded - n
+        b = jnp.asarray(np.pad(np.asarray(byte_lens), (0, pad)), jnp.int32)
+        m = jnp.asarray(
+            np.pad(np.asarray(max_output_tokens), (0, pad)), jnp.int32
+        )
+        k = jnp.asarray(np.pad(np.asarray(categories), (0, pad)), jnp.int32)
+        pools, budgets = jax_route_batch(
+            self.calibrator.to_state(),
+            b,
+            m,
+            k,
+            short_cmax=self.short.config.c_max,
+            b_short=self.b_short,
+            gamma=self.calibrator.gamma,
+        )
+        return np.asarray(pools)[:n], np.asarray(budgets)[:n]
 
     # -- observability -------------------------------------------------------
     def stats(self) -> dict:

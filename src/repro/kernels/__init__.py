@@ -8,6 +8,14 @@ Validated with ``interpret=True`` on CPU against :mod:`repro.kernels.ref`;
 compiled by Mosaic on real TPU backends.
 """
 
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; alias the
+# old spelling once here (package __init__ runs before any kernel submodule)
+# so every kernel can use the new name unconditionally.
+if not hasattr(_pltpu, "CompilerParams"):  # pragma: no cover - version shim
+    _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+
 from repro.kernels.ops import flash_attention, paged_attention, ssd_scan
 from repro.kernels import ref
 

@@ -23,6 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# repro.kernels.__init__ (always initialized first) aliases the old
+# pltpu.TPUCompilerParams spelling to CompilerParams on legacy jax.
+
 
 def _ssd_kernel(
     x_ref,  # (1, 1, Q, P) — dt·x already folded

@@ -1,9 +1,27 @@
 """Discrete-event simulator for fleet sizing / latency / reliability
-(paper Appendix A: instance DES, analytical profiler, fleet verification)."""
+(paper Appendix A: instance DES, analytical profiler, fleet verification).
+
+Two interchangeable fleet backends (``FleetSim(backend=...)``):
+
+* ``"reference"`` — scalar engine (:mod:`repro.sim.engine`): one Python
+  object per sequence; ground truth for unit tests.
+* ``"vectorized"`` — struct-of-arrays engine
+  (:mod:`repro.sim.vector_engine`): all instances of a pool step together
+  in masked NumPy ops with event-distance jumps, epoch-batched JAX routing
+  and EMA sync; 10×+ faster at fleet scale (``benchmarks/sim_throughput.py``)
+  and behaviourally equivalent (``tests/test_vector_engine.py``).
+"""
 
 from repro.sim.engine import InstanceSim
 from repro.sim.fleet import FleetResult, FleetSim, PoolSim, run_fleet
-from repro.sim.metrics import RequestRecord, SimSummary, percentile, summarize
+from repro.sim.metrics import (
+    RequestRecord,
+    SimSummary,
+    percentile,
+    summarize,
+    summarize_columns,
+)
+from repro.sim.vector_engine import VectorPoolSim
 from repro.sim.profiler import (
     HEADROOM,
     FleetPlan,
@@ -31,6 +49,8 @@ __all__ = [
     "SimSummary",
     "percentile",
     "summarize",
+    "summarize_columns",
+    "VectorPoolSim",
     "HEADROOM",
     "FleetPlan",
     "PoolProfile",

@@ -13,6 +13,15 @@ Each vLLM-style engine is an *iteration-based continuous-batching server*:
 The fleet layer (:mod:`repro.sim.fleet`) drives many instances plus the
 token-budget router; this module is single-instance and time is advanced by
 the caller, which makes it directly unit-testable.
+
+This scalar engine is the **reference backend** (``backend="reference"``):
+one Python object per sequence, one call per instance per iteration. The
+struct-of-arrays **vectorized backend** (:mod:`repro.sim.vector_engine`,
+``backend="vectorized"``) steps every instance of a pool in bulk NumPy ops
+and must stay behaviourally equivalent to this implementation — the
+equivalence suite in ``tests/test_vector_engine.py`` locks the two together.
+When changing admission, preemption, truncation, or timing semantics here,
+mirror the change there.
 """
 
 from __future__ import annotations
@@ -22,7 +31,12 @@ import math
 from collections import deque
 from typing import Optional
 
-from repro.core.pools import KV_BLOCK_TOKENS, PoolConfig, TOTAL_KV_BLOCKS
+from repro.core.pools import (
+    KV_BLOCK_TOKENS,
+    PoolConfig,
+    PoolState,
+    TOTAL_KV_BLOCKS,
+)
 from repro.core.router import Request
 from repro.sim.metrics import RequestRecord
 from repro.sim.timing import TimingModel
@@ -66,10 +80,15 @@ class InstanceSim:
         *,
         total_blocks: Optional[int] = None,
         name: str = "instance",
+        pool_state: Optional[PoolState] = None,
     ) -> None:
         self.pool = pool
         self.timing = timing
         self.name = name
+        # Shared dispatch state, maintained *incrementally* on every
+        # submit/admit/preempt/complete so the router reads O(1) counters
+        # instead of sweeping all instances per arrival (paper §2.2).
+        self.pool_state = pool_state
         # The block budget reserves C_max tokens per slot (the paper's
         # provisioning rule): n_seq slots x ceil(C_max/16) blocks.
         if total_blocks is None:
@@ -95,6 +114,11 @@ class InstanceSim:
     def idle(self) -> bool:
         return not self.queue and not self.active
 
+    def _state_add(self, d_queue: int, d_active: int) -> None:
+        if self.pool_state is not None:
+            self.pool_state.queue_depth += d_queue
+            self.pool_state.active += d_active
+
     def submit(self, request: Request, now: float) -> bool:
         """Enqueue a request; reject if the prompt alone exceeds C_max."""
         if request.true_input_tokens >= self.pool.c_max:
@@ -112,6 +136,7 @@ class InstanceSim:
             )
             return False
         self.queue.append((request, now))
+        self._state_add(+1, 0)
         return True
 
     # -- admission ------------------------------------------------------------
@@ -122,6 +147,7 @@ class InstanceSim:
             if need > self.total_blocks:
                 # can never fit, even on an empty instance → reject
                 self.queue.popleft()
+                self._state_add(-1, 0)
                 self.rejection_count += 1
                 self.records.append(
                     RequestRecord(
@@ -138,6 +164,7 @@ class InstanceSim:
             if need > self.blocks_free:
                 break  # head-of-line: wait for blocks
             self.queue.popleft()
+            self._state_add(-1, +1)
             self.blocks_free -= need
             self.active.append(
                 _Seq(
@@ -171,6 +198,7 @@ class InstanceSim:
         )
         # Re-queue at the front so it resumes promptly (vLLM behaviour).
         self.queue.appendleft((restart, victim.enqueue_time))
+        self._state_add(+1, -1)
         return True
 
     # -- one engine iteration ---------------------------------------------------
@@ -233,6 +261,7 @@ class InstanceSim:
 
             if seq.decode_remaining == 0:
                 self.active.remove(seq)
+                self._state_add(0, -1)
                 self.blocks_free += seq.blocks
                 completed.append(
                     RequestRecord(

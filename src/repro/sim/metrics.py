@@ -1,10 +1,21 @@
-"""Latency / reliability metrics for the DES (paper Tables 2–3)."""
+"""Latency / reliability metrics for the DES (paper Tables 2–3).
+
+Two aggregation paths with identical semantics:
+
+* :func:`summarize` — over a list of :class:`RequestRecord` objects, used by
+  the scalar reference backend;
+* :func:`summarize_columns` — over columnar NumPy arrays, used by the
+  vectorized backend so a million-request run never materializes a million
+  Python objects. Percentiles use the same nearest-rank definition.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Mapping, Sequence
+
+import numpy as np
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -104,6 +115,67 @@ def summarize(
         ttft_p99=percentile(ttfts, 99),
         tpot_p50=percentile(tpots, 50),
         tpot_p99=percentile(tpots, 99),
+        makespan=makespan,
+        throughput=len(done) / makespan if makespan > 0 else 0.0,
+    )
+
+
+def _percentile_sorted(values: np.ndarray, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted array, matching
+    :func:`percentile` exactly (sort once, index per quantile)."""
+    n = len(values)
+    if n == 0:
+        return 0.0
+    rank = max(0, min(n - 1, math.ceil(q / 100.0 * n) - 1))
+    return float(values[rank])
+
+
+def summarize_columns(
+    name: str,
+    cols: Mapping[str, np.ndarray],
+    *,
+    warmup_frac: float = 0.20,
+    total_spills: int = 0,
+) -> SimSummary:
+    """Columnar twin of :func:`summarize` (same 20% warm-up discard).
+
+    ``cols`` holds one array per :class:`RequestRecord` field:
+    ``request_id, arrival, first_token, finish, output_tokens, preemptions,
+    truncated, rejected``.
+    """
+    n = len(cols["arrival"])
+    if n == 0:
+        return SimSummary(name, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0.0, 0.0)
+
+    order = np.argsort(cols["arrival"], kind="stable")
+    window = order[int(n * warmup_frac) :]
+
+    rejected = cols["rejected"][window]
+    done = window[~rejected]
+    ttfts = np.sort(cols["first_token"][done] - cols["arrival"][done])
+    out = cols["output_tokens"][done]
+    multi = out > 1
+    tpots = np.sort(
+        (cols["finish"][done] - cols["first_token"][done])[multi]
+        / (out[multi] - 1)
+    )
+    start = float(cols["arrival"][window[0]]) if len(window) else 0.0
+    makespan = (
+        float(cols["finish"][done].max()) - start if len(done) else 0.0
+    )
+
+    return SimSummary(
+        name=name,
+        num_requests=len(window),
+        completed=len(done),
+        rejected=int(rejected.sum()),
+        truncated=int(cols["truncated"][window].sum()),
+        preemptions=int(cols["preemptions"][window].sum()),
+        spills=total_spills,
+        ttft_p50=_percentile_sorted(ttfts, 50),
+        ttft_p99=_percentile_sorted(ttfts, 99),
+        tpot_p50=_percentile_sorted(tpots, 50),
+        tpot_p99=_percentile_sorted(tpots, 99),
         makespan=makespan,
         throughput=len(done) / makespan if makespan > 0 else 0.0,
     )

@@ -29,6 +29,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class TimingModel:
@@ -41,6 +43,15 @@ class TimingModel:
 
     def iter_time(self, n_active: int) -> float:
         return self.w_base + self.h_per_seq * n_active
+
+    def iter_time_batch(self, n_active: np.ndarray) -> np.ndarray:
+        """Vectorized roofline: t_iter for a whole fleet of instances.
+
+        Computed as ``W + H·n`` with the same float64 operation order as
+        :meth:`iter_time` so the vectorized simulator backend reproduces the
+        scalar backend's event times bit-for-bit.
+        """
+        return self.w_base + self.h_per_seq * n_active.astype(np.float64)
 
     def iterations_for(self, l_in: int, l_out: int) -> int:
         """ceil(L_in/C) prefill iterations + L_out decode iterations."""

@@ -1,0 +1,555 @@
+"""Struct-of-arrays vectorized pool simulator (``backend="vectorized"``).
+
+The scalar reference engine (:mod:`repro.sim.engine`) models one sequence as
+one Python object and one instance-iteration as one method call — perfect for
+unit tests, painfully slow for million-request fleet sweeps. This module
+re-expresses the *same* iteration semantics as dense NumPy arrays:
+
+* per-slot state lives in ``(num_instances, n_seq)`` arrays
+  (``prefill_remaining``, ``decode_remaining``, ``generated``, ``blocks``,
+  …) and per-instance state in ``(num_instances,)`` arrays
+  (``blocks_free``, ``next_wake``, ``load``);
+* one *round* advances every due instance by ``k ≥ 1`` engine iterations in
+  bulk masked array ops, where ``k`` is the per-instance distance to the
+  next discrete event (completion, context-window truncation, prefill
+  chunk, KV-pressure, or the sweep horizon) — between events all iterations
+  are identical, so jumping is exact;
+* iteration wall-clock times come from the ``t_iter = W + H·n_active``
+  roofline in one vectorized expression
+  (:meth:`repro.sim.timing.TimingModel.iter_time_batch`).
+
+Equivalence contract with the scalar engine
+-------------------------------------------
+Admission (head-of-line FIFO with block reservation), KV-block growth, and
+truncation are replicated exactly. The rare rounds where block growth would
+exceed ``blocks_free`` (the only place where within-iteration sequence order
+matters) fall back to a per-instance scalar emulation of the reference
+decode loop — including vLLM-style youngest-victim preemption-by-recompute —
+so preemption counts and victim choices match the reference engine
+decision-for-decision. ``tests/test_vector_engine.py`` asserts record-level
+equality on seeded preemption-heavy traces (with power-of-two timing
+constants so float accumulation is exact in both backends).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.pools import (
+    KV_BLOCK_TOKENS,
+    PoolConfig,
+    PoolState,
+    TOTAL_KV_BLOCKS,
+)
+from repro.core.router import Request
+from repro.sim.engine import _blocks_for  # single source for KV rounding
+from repro.sim.metrics import RequestRecord
+from repro.sim.timing import TimingModel
+
+#: Sentinel for "no constraint" in integer min-reductions.
+_BIG = np.int64(1) << 62
+_BIGF = 1.0e18
+
+#: Queue entries are tuples to keep the admission loop allocation-light:
+#: (request_id, arrival, input_tokens, output_tokens, enqueue, preemptions).
+_QID, _QARR, _QIN, _QOUT, _QENQ, _QPRE = range(6)
+
+
+class _ColumnStore:
+    """Columnar request-record accumulator (bulk chunks + scalar buffer)."""
+
+    COLUMNS = (
+        ("request_id", np.int64),
+        ("arrival", np.float64),
+        ("first_token", np.float64),
+        ("finish", np.float64),
+        ("output_tokens", np.int64),
+        ("preemptions", np.int64),
+        ("truncated", np.bool_),
+        ("rejected", np.bool_),
+    )
+
+    def __init__(self) -> None:
+        self._chunks: list[tuple[np.ndarray, ...]] = []
+        self._buffer: list[tuple] = []
+
+    def add_bulk(self, *arrays: np.ndarray) -> None:
+        if len(arrays[0]):
+            self._chunks.append(tuple(np.ascontiguousarray(a) for a in arrays))
+
+    def add_one(self, *values) -> None:
+        self._buffer.append(values)
+
+    def __len__(self) -> int:
+        return sum(len(c[0]) for c in self._chunks) + len(self._buffer)
+
+    def _flush(self) -> None:
+        if self._buffer:
+            cols = list(zip(*self._buffer))
+            self._chunks.append(
+                tuple(
+                    np.asarray(col, dtype=dt)
+                    for col, (_, dt) in zip(cols, self.COLUMNS)
+                )
+            )
+            self._buffer.clear()
+
+    def arrays(self) -> dict[str, np.ndarray]:
+        """Concatenate every chunk into one array per column."""
+        self._flush()
+        if not self._chunks:
+            return {
+                name: np.empty(0, dtype=dt) for name, dt in self.COLUMNS
+            }
+        return {
+            name: np.concatenate([c[j] for c in self._chunks])
+            for j, (name, dt) in enumerate(self.COLUMNS)
+        }
+
+
+class VectorPoolSim:
+    """All instances of one pool, stepped together as dense arrays.
+
+    Drop-in behavioural twin of ``PoolSim`` + ``InstanceSim`` for the fleet
+    layer: ``least_loaded``/``submit`` dispatch, ``sweep(t_limit)`` advances
+    every instance through all engine iterations that start strictly before
+    ``t_limit`` (matching the reference heap's arrival-first tie-break).
+    """
+
+    def __init__(
+        self,
+        config: PoolConfig,
+        num_instances: int,
+        timing: TimingModel,
+        *,
+        total_blocks: Optional[int] = None,
+        name: Optional[str] = None,
+    ) -> None:
+        self.config = config
+        self.timing = timing
+        self.name = name or config.name
+        if total_blocks is None:
+            total_blocks = min(
+                TOTAL_KV_BLOCKS, config.n_seq * _blocks_for(config.c_max)
+            )
+        self.total_blocks = total_blocks
+        self.num_instances = num_instances
+        self.state = PoolState(config=config, num_instances=num_instances)
+
+        ii, ss = num_instances, config.n_seq
+        # Token/block counts fit comfortably in int32 (c_max ≤ 65536); the
+        # narrower dtype halves the memory traffic of the hot round.
+        # -- per-slot SoA state, shape (I, S) --------------------------------
+        self.occupied = np.zeros((ii, ss), dtype=bool)
+        self.req_id = np.full((ii, ss), -1, dtype=np.int64)
+        self.arrival = np.zeros((ii, ss), dtype=np.float64)
+        self.enqueue = np.zeros((ii, ss), dtype=np.float64)
+        self.input_tokens = np.zeros((ii, ss), dtype=np.int32)  # incl. recompute
+        self.output_tokens = np.zeros((ii, ss), dtype=np.int32)  # original L_out
+        self.prefill_remaining = np.zeros((ii, ss), dtype=np.int32)
+        self.decode_remaining = np.zeros((ii, ss), dtype=np.int32)
+        self.generated = np.zeros((ii, ss), dtype=np.int32)
+        self.blocks = np.zeros((ii, ss), dtype=np.int32)
+        self.first_token = np.full((ii, ss), np.nan, dtype=np.float64)
+        self.truncated = np.zeros((ii, ss), dtype=bool)
+        self.preempt_carried = np.zeros((ii, ss), dtype=np.int32)
+        self.seq_no = np.zeros((ii, ss), dtype=np.int64)  # admission order
+        # -- per-instance state, shape (I,) ----------------------------------
+        self.blocks_free = np.full(ii, total_blocks, dtype=np.int64)
+        self.next_wake = np.full(ii, np.inf, dtype=np.float64)
+        self.n_active = np.zeros(ii, dtype=np.int64)
+        self.queue_len = np.zeros(ii, dtype=np.int64)
+        self.load = np.zeros(ii, dtype=np.int64)  # queue + active
+        self.busy_time = np.zeros(ii, dtype=np.float64)
+        self.queues: list[deque] = [deque() for _ in range(ii)]
+
+        self.wake_min = np.inf
+        self.preemption_count = 0
+        self.rejection_count = 0
+        self._seq_counter = 0
+        self._records = _ColumnStore()
+        self._completed_ids: list[np.ndarray] = []
+
+    # -- dispatch interface (fleet layer) ------------------------------------
+    @property
+    def preemptions(self) -> int:
+        return self.preemption_count
+
+    @property
+    def rejections(self) -> int:
+        return self.rejection_count
+
+    @property
+    def busy(self) -> bool:
+        return bool(np.isfinite(self.wake_min))
+
+    def least_loaded(self) -> int:
+        """First instance with minimal load — same tie-break as the
+        reference path's ``min(instances, key=load)``."""
+        return int(np.argmin(self.load))
+
+    def submit(self, instance: int, request: Request, now: float) -> bool:
+        """Enqueue on one instance; reject if the prompt exceeds C_max."""
+        if request.true_input_tokens >= self.config.c_max:
+            self.rejection_count += 1
+            self._records.add_one(
+                request.request_id, request.arrival_time, now, now,
+                0, 0, False, True,
+            )
+            return False
+        self.queues[instance].append(
+            (
+                request.request_id,
+                request.arrival_time,
+                request.true_input_tokens,
+                request.true_output_tokens,
+                now,
+                0,
+            )
+        )
+        self.queue_len[instance] += 1
+        self.load[instance] += 1
+        self.state.queue_depth += 1
+        if not np.isfinite(self.next_wake[instance]):
+            self.next_wake[instance] = now
+            self.wake_min = min(self.wake_min, now)
+        return True
+
+    # -- records -------------------------------------------------------------
+    def record_arrays(self) -> dict[str, np.ndarray]:
+        return self._records.arrays()
+
+    @property
+    def records(self) -> list[RequestRecord]:
+        """Materialize RequestRecord objects (tests / debugging only)."""
+        cols = self.record_arrays()
+        return [
+            RequestRecord(
+                request_id=int(cols["request_id"][j]),
+                pool=self.config.name,
+                arrival=float(cols["arrival"][j]),
+                first_token=float(cols["first_token"][j]),
+                finish=float(cols["finish"][j]),
+                output_tokens=int(cols["output_tokens"][j]),
+                preemptions=int(cols["preemptions"][j]),
+                truncated=bool(cols["truncated"][j]),
+                rejected=bool(cols["rejected"][j]),
+            )
+            for j in range(len(cols["request_id"]))
+        ]
+
+    def drain_completed_ids(self) -> np.ndarray:
+        """Request ids completed since the last drain (for router feedback)."""
+        if not self._completed_ids:
+            return np.empty(0, dtype=np.int64)
+        out = np.concatenate(self._completed_ids)
+        self._completed_ids.clear()
+        return out
+
+    # -- admission (exact mirror of InstanceSim._try_admit) ------------------
+    def _try_admit(self, i: int, now: float) -> None:
+        q = self.queues[i]
+        n_seq = self.config.n_seq
+        while q and self.n_active[i] < n_seq:
+            entry = q[0]
+            need = _blocks_for(entry[_QIN])
+            if need > self.total_blocks:
+                q.popleft()
+                self.queue_len[i] -= 1
+                self.load[i] -= 1
+                self.state.queue_depth -= 1
+                self.rejection_count += 1
+                self._records.add_one(
+                    entry[_QID], entry[_QARR], now, now, 0, 0, False, True
+                )
+                continue
+            if need > self.blocks_free[i]:
+                break  # head-of-line: wait for blocks
+            q.popleft()
+            self.queue_len[i] -= 1
+            self.state.queue_depth -= 1
+            self.state.active += 1
+            self.blocks_free[i] -= need
+            self.n_active[i] += 1
+            slot = int(np.argmin(self.occupied[i]))  # first free slot
+            self.occupied[i, slot] = True
+            self.req_id[i, slot] = entry[_QID]
+            self.arrival[i, slot] = entry[_QARR]
+            self.enqueue[i, slot] = entry[_QENQ]
+            self.input_tokens[i, slot] = entry[_QIN]
+            self.output_tokens[i, slot] = entry[_QOUT]
+            self.prefill_remaining[i, slot] = entry[_QIN]
+            self.decode_remaining[i, slot] = entry[_QOUT]
+            self.generated[i, slot] = 0
+            self.blocks[i, slot] = need
+            self.first_token[i, slot] = np.nan
+            self.truncated[i, slot] = False
+            self.preempt_carried[i, slot] = entry[_QPRE]
+            self.seq_no[i, slot] = self._seq_counter
+            self._seq_counter += 1
+
+    # -- preemption (exact mirror of InstanceSim._preempt_one) ---------------
+    def _preempt_one(self, i: int, alive: list[int]) -> bool:
+        victims = [
+            s
+            for s in alive
+            if self.prefill_remaining[i, s] == 0
+            and self.decode_remaining[i, s] > 0
+        ]
+        if not victims:
+            return False
+        # First-admitted among those with max enqueue time (= Python max()).
+        victim = victims[0]
+        for s in victims[1:]:
+            if self.enqueue[i, s] > self.enqueue[i, victim]:
+                victim = s
+        alive.remove(victim)
+        self.occupied[i, victim] = False
+        self.blocks_free[i] += self.blocks[i, victim]
+        self.blocks[i, victim] = 0
+        self.preemption_count += 1
+        self.n_active[i] -= 1
+        # Recompute mode: restart prefill over prompt + generated-so-far,
+        # with the *original* output budget (reference engine semantics).
+        self.queues[i].appendleft(
+            (
+                int(self.req_id[i, victim]),
+                float(self.arrival[i, victim]),
+                int(self.input_tokens[i, victim] + self.generated[i, victim]),
+                int(self.output_tokens[i, victim]),
+                float(self.enqueue[i, victim]),
+                int(self.preempt_carried[i, victim]) + 1,
+            )
+        )
+        self.queue_len[i] += 1
+        self.state.queue_depth += 1
+        self.state.active -= 1
+        return True
+
+    # -- scalar fallback round (KV-pressure: order-dependent) ----------------
+    def _scalar_round(self, i: int, now: float, end: float) -> None:
+        """One exact reference-engine decode phase for instance ``i``.
+
+        Runs only on rounds where block growth may exceed ``blocks_free`` —
+        the single case where within-iteration sequence order (and therefore
+        youngest-victim preemption) affects the outcome.
+        """
+        slots = np.flatnonzero(self.occupied[i])
+        alive = list(slots[np.argsort(self.seq_no[i, slots])])
+        c_max = self.config.c_max
+        for s in list(alive):
+            if s not in alive:
+                continue  # evicted by an earlier sequence's preemption
+            if not (
+                self.prefill_remaining[i, s] == 0
+                and self.decode_remaining[i, s] > 0
+            ):
+                continue
+            if np.isnan(self.first_token[i, s]):
+                self.first_token[i, s] = end
+            self.generated[i, s] += 1
+            self.decode_remaining[i, s] -= 1
+
+            need = _blocks_for(self.input_tokens[i, s] + self.generated[i, s])
+            while need > self.blocks[i, s]:
+                if self.blocks_free[i] > 0:
+                    self.blocks_free[i] -= 1
+                    self.blocks[i, s] += 1
+                else:
+                    if not self._preempt_one(i, alive):
+                        break
+                    if s not in alive:  # we were the victim
+                        break
+            if s not in alive:
+                continue
+
+            context = self.input_tokens[i, s] + self.generated[i, s]
+            if context >= c_max and self.decode_remaining[i, s] > 0:
+                self.truncated[i, s] = True
+                self.decode_remaining[i, s] = 0
+
+            if self.decode_remaining[i, s] == 0:
+                alive.remove(s)
+                self.occupied[i, s] = False
+                self.blocks_free[i] += self.blocks[i, s]
+                self.n_active[i] -= 1
+                self.load[i] -= 1
+                self.state.active -= 1
+                ft = self.first_token[i, s]
+                self._records.add_one(
+                    int(self.req_id[i, s]),
+                    float(self.arrival[i, s]),
+                    float(end if np.isnan(ft) else ft),
+                    float(end),
+                    int(self.generated[i, s]),
+                    int(self.preempt_carried[i, s]),
+                    bool(self.truncated[i, s]),
+                    False,
+                )
+                self._completed_ids.append(
+                    np.asarray([self.req_id[i, s]], dtype=np.int64)
+                )
+
+    # -- the vectorized round ------------------------------------------------
+    def sweep(self, t_limit: float = np.inf) -> None:
+        """Run every engine iteration starting strictly before ``t_limit``."""
+        while self.wake_min < t_limit:
+            self._round(t_limit)
+
+    def _round(self, t_limit: float) -> None:
+        due = np.flatnonzero(self.next_wake < t_limit)
+        # Admission first, exactly like the reference step() prologue.
+        for i in due[self.queue_len[due] > 0]:
+            self._try_admit(i, float(self.next_wake[i]))
+
+        nact = self.n_active[due]
+        busy = nact > 0
+        # Instances with nothing admitted go back to sleep (reference: idle
+        # instances leave the wake heap). A non-empty queue here means the
+        # head is future-dated relative to this instance — cannot happen,
+        # but a defensive retry avoids a livelock if it ever does.
+        idle_rows = due[~busy]
+        if len(idle_rows):
+            has_q = self.queue_len[idle_rows] > 0
+            self.next_wake[idle_rows] = np.where(
+                has_q, self.next_wake[idle_rows] + 1e-9, np.inf
+            )
+        rows = due[busy]
+        if not len(rows):
+            self.wake_min = float(self.next_wake.min())
+            return
+
+        nact = nact[busy]
+        now = self.next_wake[rows]
+        t_it = self.timing.iter_time_batch(nact)
+
+        # 1) One prefill chunk of up to C tokens to the oldest prefilling
+        #    sequence of each instance (admission order == seq_no order).
+        occ = self.occupied[rows]
+        pre = self.prefill_remaining[rows]
+        pmask = occ & (pre > 0)
+        has_pre = pmask.any(axis=1)
+        if has_pre.any():
+            key = np.where(pmask, self.seq_no[rows], _BIG)
+            oldest = key.argmin(axis=1)
+            pr = np.flatnonzero(has_pre)
+            gi, gs = rows[pr], oldest[pr]
+            take = np.minimum(
+                self.prefill_remaining[gi, gs], self.timing.prefill_chunk
+            )
+            self.prefill_remaining[gi, gs] -= take
+            pre[pr, oldest[pr]] -= take  # keep the local copy in sync
+
+        # 2) Decode phase. ``dec`` is the decoding mask at round start —
+        #    sequences whose final prefill chunk just landed are included
+        #    (prefill→decode fusion, as in the reference engine).
+        dec = occ & (pre == 0) & (self.decode_remaining[rows] > 0)
+        dec_rem = self.decode_remaining[rows]
+        gen = self.generated[rows]
+        inp = self.input_tokens[rows]
+        ctx0 = inp + gen
+
+        # Event-distance jump: k iterations are identical until the nearest
+        # completion / truncation / prefill boundary / sweep horizon.
+        k_complete = np.where(dec, dec_rem, _BIG).min(axis=1)
+        k_trunc = np.where(dec, self.config.c_max - ctx0, _BIG).min(axis=1)
+        with np.errstate(invalid="ignore"):
+            q = (t_limit - now) / t_it
+        k_time = np.where(np.isfinite(q), np.ceil(q - 1e-9), _BIGF)
+        k = np.minimum(np.minimum(k_complete, k_trunc).astype(np.float64), k_time)
+        k = np.where(has_pre, 1.0, np.maximum(k, 1.0))
+        k = np.minimum(k, float(_BIG)).astype(np.int64)
+
+        # KV growth over the whole jump; shrink to k=1 (and then to the
+        # exact scalar fallback) when blocks_free cannot absorb it.
+        blocks_r = self.blocks[rows]
+
+        def growth(kk: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+            new_gen = gen + np.where(dec, kk[:, None], 0)
+            need = np.where(
+                occ,
+                np.maximum(
+                    1, (inp + new_gen + (KV_BLOCK_TOKENS - 1)) // KV_BLOCK_TOKENS
+                ),
+                0,
+            )
+            grow = np.maximum(need - blocks_r, 0)
+            return need, grow.sum(axis=1)
+
+        need_end, total_grow = growth(k)
+        over = total_grow > self.blocks_free[rows]
+        if over.any():
+            k = np.where(over, 1, k)
+            need_end, total_grow = growth(k)
+            pressure = total_grow > self.blocks_free[rows]
+        else:
+            pressure = np.zeros(len(rows), dtype=bool)
+
+        end = now + k * t_it
+        self.busy_time[rows] += k * t_it
+
+        # -- vectorized fast path (no preemption possible) -------------------
+        v = np.flatnonzero(~pressure)
+        if len(v):
+            gv = rows[v]
+            decv = dec[v]
+            kv = k[v][:, None]
+            endv = end[v]
+
+            ft = self.first_token[gv]
+            ft_new = np.where(
+                decv & np.isnan(ft), (now[v] + t_it[v])[:, None], ft
+            )
+            gen_after = gen[v] + np.where(decv, kv, 0)
+            rem_after = dec_rem[v] - np.where(decv, kv, 0)
+
+            # context-window truncation at C_max mid-generation
+            trunc = decv & (inp[v] + gen_after >= self.config.c_max) & (
+                rem_after > 0
+            )
+            rem_after = np.where(trunc, 0, rem_after)
+            trunc_all = self.truncated[gv] | trunc
+
+            grow_v = np.maximum(need_end[v] - blocks_r[v], 0)
+            self.blocks_free[gv] -= grow_v.sum(axis=1)
+            self.blocks[gv] = np.where(occ[v], need_end[v], blocks_r[v])
+
+            comp = decv & (rem_after == 0)
+            self.generated[gv] = gen_after
+            self.decode_remaining[gv] = rem_after
+            self.first_token[gv] = ft_new
+            self.truncated[gv] = trunc_all
+
+            if comp.any():
+                ri, si = np.nonzero(comp)
+                gi = gv[ri]
+                self._records.add_bulk(
+                    self.req_id[gi, si],
+                    self.arrival[gi, si],
+                    ft_new[ri, si],
+                    endv[ri],
+                    gen_after[ri, si],
+                    self.preempt_carried[gi, si],
+                    trunc_all[ri, si],
+                    np.zeros(len(ri), dtype=bool),
+                )
+                self._completed_ids.append(self.req_id[gi, si].copy())
+                np.add.at(self.blocks_free, gi, self.blocks[gi, si])
+                self.blocks[gi, si] = 0
+                self.occupied[gi, si] = False
+                done_per_row = np.bincount(ri, minlength=len(v)).astype(np.int64)
+                self.n_active[gv] -= done_per_row
+                self.load[gv] -= done_per_row
+                self.state.active -= len(ri)
+
+        # -- exact scalar fallback for KV-pressure rounds --------------------
+        for j in np.flatnonzero(pressure):
+            self._scalar_round(int(rows[j]), float(now[j]), float(end[j]))
+
+        # 3) Reschedule: wake at iteration end while work remains.
+        alive_rows = (self.n_active[rows] > 0) | (self.queue_len[rows] > 0)
+        self.next_wake[rows] = np.where(alive_rows, end, np.inf)
+        self.wake_min = float(self.next_wake.min())

@@ -1,0 +1,136 @@
+"""Minimal deterministic fallback for the ``hypothesis`` library.
+
+Loaded by ``tests/conftest.py`` ONLY when the real ``hypothesis`` package is
+not importable (the CI container does not ship it and the repo policy forbids
+installing new dependencies). It implements exactly the surface our tests
+use — ``given``, ``settings`` profiles, and the strategies in
+:mod:`hypothesis.strategies` — by enumerating boundary values plus a
+seeded-random sample instead of doing real property-based shrinking.
+
+If the genuine library is installed it always wins; delete this package the
+day ``hypothesis`` lands in the image.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import types
+from typing import Any, Callable
+
+from . import strategies  # noqa: F401  (re-export: hypothesis.strategies)
+
+__all__ = ["given", "settings", "assume", "HealthCheck", "strategies"]
+
+_IS_FALLBACK = True  # marker so conftest/tests can detect the shim
+
+
+class HealthCheck:
+    """No-op placeholder mirroring hypothesis.HealthCheck members."""
+
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+class _Profile(dict):
+    pass
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+    """Profile registry + decorator, mirroring ``hypothesis.settings``."""
+
+    _profiles: dict[str, _Profile] = {"default": _Profile(max_examples=20)}
+    _current: _Profile = _profiles["default"]
+
+    def __init__(self, **kwargs: Any) -> None:
+        self.kwargs = kwargs
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._hypo_settings = self.kwargs  # noqa: SLF001
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs: Any) -> None:
+        cls._profiles[name] = _Profile(**kwargs)
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = cls._profiles[name]
+
+    @classmethod
+    def max_examples(cls) -> int:
+        return int(cls._current.get("max_examples", 20))
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition: bool) -> bool:
+    """Skip the current example when its precondition does not hold."""
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def given(*arg_strategies: Any, **kw_strategies: Any) -> Callable:
+    """Deterministic stand-in for ``hypothesis.given``.
+
+    Runs the test with every combination of each strategy's boundary
+    examples first, then pads to the active profile's ``max_examples`` with
+    seeded-random draws, so failures reproduce across runs.
+    """
+
+    if arg_strategies:
+        raise NotImplementedError(
+            "hypothesis fallback shim supports keyword strategies only; "
+            "write @given(x=st.integers(...)) instead of @given(st.integers(...))"
+        )
+
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            # @settings may sit above @given (stamping the wrapper) or
+            # below it (stamping fn) — honour both stacking orders.
+            overrides = getattr(
+                wrapper, "_hypo_settings", getattr(fn, "_hypo_settings", {})
+            )
+            n = int(overrides.get("max_examples", settings.max_examples()))
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            names = list(kw_strategies)
+            strats = [kw_strategies[k] for k in names]
+
+            examples: list[tuple] = []
+            boundary_sets = [s.boundary_examples() for s in strats]
+            for combo in itertools.islice(itertools.product(*boundary_sets), n):
+                examples.append(combo)
+            while len(examples) < n:
+                examples.append(tuple(s.example(rng) for s in strats))
+
+            for combo in examples[:n]:
+                try:
+                    fn(*args, **dict(kwargs, **dict(zip(names, combo))))
+                except _Assumption:
+                    continue
+
+        # Parity with the real library: pytest plugins (e.g. anyio) probe
+        # `fn.hypothesis.inner_test` to find the undecorated test.
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (the real library rewrites the signature the same way).
+        wrapper.__dict__.pop("__wrapped__", None)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p
+                for p in sig.parameters.values()
+                if p.name not in kw_strategies
+            ]
+        )
+        return wrapper
+
+    return deco

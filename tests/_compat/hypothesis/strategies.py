@@ -1,0 +1,177 @@
+"""Strategy objects for the fallback ``hypothesis`` shim.
+
+Each strategy exposes two methods used by ``given``:
+
+* ``boundary_examples()`` — small list of deterministic edge values;
+* ``example(rng)`` — one seeded-random draw.
+
+Only the strategies our test-suite uses are implemented.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, Sequence
+
+
+class SearchStrategy:
+    def boundary_examples(self) -> list:
+        return [self.example(random.Random(0))]
+
+    def example(self, rng: random.Random):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def map(self, fn) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn) -> None:
+        self.base, self.fn = base, fn
+
+    def boundary_examples(self) -> list:
+        return [self.fn(x) for x in self.base.boundary_examples()]
+
+    def example(self, rng: random.Random):
+        return self.fn(self.base.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base: SearchStrategy, pred) -> None:
+        self.base, self.pred = base, pred
+
+    def boundary_examples(self) -> list:
+        return [x for x in self.base.boundary_examples() if self.pred(x)] or [
+            self.example(random.Random(0))
+        ]
+
+    def example(self, rng: random.Random):
+        for _ in range(1000):
+            x = self.base.example(rng)
+            if self.pred(x):
+                return x
+        raise ValueError("filter predicate rejected 1000 draws")
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int) -> None:
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def boundary_examples(self) -> list[int]:
+        vals = {self.lo, self.hi, (self.lo + self.hi) // 2}
+        return sorted(vals)
+
+    def example(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float) -> None:
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def boundary_examples(self) -> list[float]:
+        mid = 0.5 * (self.lo + self.hi)
+        vals = []
+        for v in (self.lo, mid, self.hi):
+            if math.isfinite(v) and v not in vals:
+                vals.append(v)
+        return vals
+
+    def example(self, rng: random.Random) -> float:
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def boundary_examples(self) -> list[bool]:
+        return [False, True]
+
+    def example(self, rng: random.Random) -> bool:
+        return rng.random() < 0.5
+
+
+class _Lists(SearchStrategy):
+    def __init__(
+        self,
+        elements: SearchStrategy,
+        *,
+        min_size: int = 0,
+        max_size: int = 10,
+    ) -> None:
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def boundary_examples(self) -> list[list]:
+        rng = random.Random(1)
+        out = [[self.elements.example(rng) for _ in range(self.min_size)]]
+        if self.max_size > self.min_size:
+            out.append(
+                [self.elements.example(rng) for _ in range(self.max_size)]
+            )
+        return out
+
+    def example(self, rng: random.Random) -> list:
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(size)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *parts: SearchStrategy) -> None:
+        self.parts = parts
+
+    def boundary_examples(self) -> list[tuple]:
+        rng = random.Random(2)
+        return [tuple(p.example(rng) for p in self.parts)]
+
+    def example(self, rng: random.Random) -> tuple:
+        return tuple(p.example(rng) for p in self.parts)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options: Sequence[Any]) -> None:
+        self.options = list(options)
+
+    def boundary_examples(self) -> list:
+        return [self.options[0], self.options[-1]]
+
+    def example(self, rng: random.Random):
+        return rng.choice(self.options)
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Integers:
+    return _Integers(min_value, max_value)
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    *,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> _Floats:
+    return _Floats(min_value, max_value)
+
+
+def booleans() -> _Booleans:
+    return _Booleans()
+
+
+def lists(
+    elements: SearchStrategy,
+    *,
+    min_size: int = 0,
+    max_size: int = 10,
+) -> _Lists:
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def tuples(*parts: SearchStrategy) -> _Tuples:
+    return _Tuples(*parts)
+
+
+def sampled_from(options: Sequence[Any]) -> _SampledFrom:
+    return _SampledFrom(options)

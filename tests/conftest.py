@@ -5,11 +5,20 @@ Smoke tests and benches must see the host's real (single) device — the
 """
 
 import os
+import sys
 
 # Guard: if a stray environment leaked the dry-run flag, drop it so tests
 # exercise the single-device paths they're written for.
 if "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""):
     del os.environ["XLA_FLAGS"]
+
+# The CI container does not ship `hypothesis` and the repo forbids adding
+# dependencies; fall back to the deterministic shim in tests/_compat so the
+# property tests still run. The real library wins whenever it is installed.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_compat"))
 
 import numpy as np
 import pytest

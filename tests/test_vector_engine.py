@@ -1,0 +1,246 @@
+"""Scalar-vs-vectorized simulator equivalence (tentpole acceptance suite).
+
+The vectorized struct-of-arrays backend must reproduce the scalar reference
+engine's behaviour. For routerless (single-pool) fleets with ``coalesce_dt=0``
+the two are *bit-identical* — completion/preemption/rejection totals, every
+per-request record, and all latency percentiles — provided the timing
+constants are dyadic (powers of two) so float accumulation is exact in both
+engines. Two-pool routed fleets relax routing to per-epoch batches, so those
+compare within tolerance.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.pools import PoolConfig, n_seq_for_cmax
+from repro.core.router import Request
+from repro.sim import A100_LLAMA3_70B, plan_fleet
+from repro.sim.fleet import FleetSim, run_fleet
+from repro.sim.timing import TimingModel
+from repro.traces import TraceSpec, generate_trace
+
+#: Dyadic constants: W, H, and every accumulated event time are exact
+#: binary floats, so `now + k*t_iter` (vector) == repeated addition (scalar).
+DYADIC = TimingModel("dyadic", w_base=2**-10, h_per_seq=2**-13, prefill_chunk=512)
+
+SUMMARY_FIELDS = (
+    "num_requests",
+    "completed",
+    "rejected",
+    "truncated",
+    "preemptions",
+    "ttft_p50",
+    "ttft_p99",
+    "tpot_p50",
+    "tpot_p99",
+    "makespan",
+)
+
+
+def poisson_trace(n, rate, seed, *, l_in=(16, 3000), l_out=(1, 400)):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [
+        Request(
+            request_id=i,
+            byte_len=int(rng.integers(4, 12_000)),
+            max_output_tokens=int(rng.integers(*l_out)),
+            category=int(rng.integers(0, 4)),
+            arrival_time=float(arrivals[i]),
+            true_input_tokens=int(rng.integers(*l_in)),
+            true_output_tokens=int(rng.integers(*l_out)),
+        )
+        for i in range(n)
+    ]
+
+
+def run_single_pool(trace, config, instances, backend, *, total_blocks=None):
+    sim = FleetSim(
+        {config.name: (config, instances)},
+        DYADIC,
+        backend=backend,
+        coalesce_dt=0.0,  # exact event ordering
+    )
+    if total_blocks is not None:
+        pool = sim.pools[config.name]
+        if backend == "reference":
+            for inst in pool.instances:
+                inst.total_blocks = total_blocks
+                inst.blocks_free = total_blocks
+        else:
+            pool.total_blocks = total_blocks
+            pool.blocks_free[:] = total_blocks
+    return sim, sim.run(trace)
+
+
+def record_tuples(result, sim):
+    if result.records is not None:
+        recs = result.records
+    else:
+        recs = [r for p in sim.pools.values() for r in p.records]
+    return sorted(
+        (
+            r.request_id,
+            r.arrival,
+            r.first_token,
+            r.finish,
+            r.output_tokens,
+            r.preemptions,
+            r.truncated,
+            r.rejected,
+        )
+        for r in recs
+    )
+
+
+class TestExactEquivalence:
+    def test_seeded_trace_identical(self):
+        """Same seeded trace → identical totals, percentiles, and records."""
+        trace = poisson_trace(1500, rate=250.0, seed=11)
+        cfg = PoolConfig("p", 4096, 16)
+        ref_sim, ref = run_single_pool(trace, cfg, 4, "reference")
+        vec_sim, vec = run_single_pool(trace, cfg, 4, "vectorized")
+        for f in SUMMARY_FIELDS:
+            assert getattr(ref.summary, f) == getattr(vec.summary, f), f
+        assert ref.preemptions == vec.preemptions
+        assert ref.rejections == vec.rejections
+        assert record_tuples(ref, ref_sim) == record_tuples(vec, vec_sim)
+
+    def test_adversarial_kv_pressure_trace(self):
+        """Tiny block budget: constant preemption + mid-generation truncation
+        must match the reference engine decision-for-decision."""
+        trace = poisson_trace(
+            600, rate=400.0, seed=3, l_in=(16, 900), l_out=(50, 800)
+        )
+        cfg = PoolConfig("p", 1024, 8)
+        ref_sim, ref = run_single_pool(
+            trace, cfg, 3, "reference", total_blocks=90
+        )
+        vec_sim, vec = run_single_pool(
+            trace, cfg, 3, "vectorized", total_blocks=90
+        )
+        # the trace actually exercises the adversarial paths
+        assert ref.preemptions > 100
+        assert ref.summary.truncated > 50
+        for f in SUMMARY_FIELDS:
+            assert getattr(ref.summary, f) == getattr(vec.summary, f), f
+        assert ref.preemptions == vec.preemptions
+        assert ref.rejections == vec.rejections
+        assert record_tuples(ref, ref_sim) == record_tuples(vec, vec_sim)
+
+    def test_rejections_identical(self):
+        """Oversized prompts reject identically in both backends."""
+        trace = poisson_trace(300, rate=100.0, seed=5, l_in=(16, 3000))
+        cfg = PoolConfig("p", 1024, 8)  # prompts ≥ 1024 → submit-time reject
+        ref_sim, ref = run_single_pool(trace, cfg, 2, "reference")
+        vec_sim, vec = run_single_pool(trace, cfg, 2, "vectorized")
+        assert ref.rejections == vec.rejections > 0
+        assert record_tuples(ref, ref_sim) == record_tuples(vec, vec_sim)
+
+
+class TestRoutedTolerance:
+    """Two-pool fleets batch routing per epoch (calibration lags ≤ one
+    epoch), so aggregate metrics agree within tolerance, not bit-for-bit."""
+
+    @pytest.fixture(scope="class")
+    def results(self):
+        n, rate = 4000, 400.0
+        trace = generate_trace(
+            TraceSpec(trace="azure", num_requests=n, rate=rate, seed=42)
+        )
+        plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
+        pools = {
+            "short": (
+                PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
+                plan.short.instances,
+            ),
+            "long": (PoolConfig("long", 65_536, 16, headroom=1.02), plan.long.instances),
+        }
+        ref = run_fleet(trace, pools, A100_LLAMA3_70B, backend="reference")
+        vec = run_fleet(trace, pools, A100_LLAMA3_70B, backend="vectorized")
+        return ref, vec
+
+    def test_completion_totals_close(self, results):
+        ref, vec = results
+        assert ref.summary.num_requests == vec.summary.num_requests
+        assert vec.summary.completed == pytest.approx(
+            ref.summary.completed, rel=0.01
+        )
+
+    def test_latency_percentiles_close(self, results):
+        ref, vec = results
+        assert vec.summary.ttft_p99 == pytest.approx(
+            ref.summary.ttft_p99, rel=0.15
+        )
+        assert vec.summary.tpot_p99 == pytest.approx(
+            ref.summary.tpot_p99, rel=0.15
+        )
+
+    def test_routing_fractions_close(self, results):
+        ref, vec = results
+        assert vec.router_stats["short_fraction"] == pytest.approx(
+            ref.router_stats["short_fraction"], abs=0.02
+        )
+
+    def test_calibration_converges_both(self, results):
+        for res in results:
+            assert all(c > 0 for c in res.router_stats["calibration"]["count"])
+
+
+class TestCanonicalRecords:
+    def test_no_double_counting(self):
+        """Every submitted request appears exactly once in the canonical
+        record list — completions and rejections never double-count."""
+        trace = poisson_trace(500, rate=300.0, seed=9, l_in=(16, 2000))
+        cfg = PoolConfig("p", 1024, 8)
+        for backend in ("reference", "vectorized"):
+            sim, res = run_single_pool(trace, cfg, 2, backend, total_blocks=120)
+            recs = record_tuples(res, sim)
+            ids = [r[0] for r in recs]
+            assert len(ids) == len(set(ids)) == len(trace)
+            assert res.summary.completed + res.summary.rejected == (
+                res.summary.num_requests
+            )
+
+    def test_summary_built_from_canonical_records(self):
+        trace = poisson_trace(400, rate=200.0, seed=13)
+        cfg = PoolConfig("p", 4096, 8)
+        sim, res = run_single_pool(trace, cfg, 2, "reference")
+        assert res.records is not None
+        from repro.sim.metrics import summarize
+
+        rebuilt = summarize("fleet", res.records, total_spills=0)
+        assert rebuilt == res.summary
+
+
+class TestIncrementalPoolState:
+    def test_counters_match_recompute_mid_run(self):
+        """PoolState.queue_depth/active stay consistent with a full O(N)
+        recompute at every step of a preemption-heavy run (O(1) dispatch)."""
+        trace = poisson_trace(200, rate=500.0, seed=7, l_in=(16, 900), l_out=(50, 400))
+        cfg = PoolConfig("p", 1024, 4)
+        sim = FleetSim({"p": (cfg, 2)}, DYADIC, coalesce_dt=0.0)
+        pool = sim.pools["p"]
+        for inst in pool.instances:
+            inst.total_blocks = 80
+            inst.blocks_free = 80
+
+        t = 0.0
+        ti = iter(sorted(trace, key=lambda r: r.arrival_time))
+        nxt = next(ti, None)
+        for _ in range(5000):
+            while nxt is not None and nxt.arrival_time <= t:
+                pool.least_loaded().submit(nxt, nxt.arrival_time)
+                nxt = next(ti, None)
+            for inst in pool.instances:
+                inst.step(t)
+            assert pool.state.queue_depth == sum(
+                len(i.queue) for i in pool.instances
+            )
+            assert pool.state.active == sum(
+                len(i.active) for i in pool.instances
+            )
+            if nxt is None and all(i.idle for i in pool.instances):
+                break
+            t += DYADIC.iter_time(1)
+        assert pool.preemptions > 0  # the run exercised preemption paths
