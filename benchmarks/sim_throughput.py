@@ -9,10 +9,18 @@ the repo's acceptance bar is ≥10× at the 100k-request scale (measured:
 reference 1896 s vs vectorized 33 s ≈ 57× on a 2-core container, with
 matching ttft_p99 between the backends).
 
+The vectorized backend is fed the trace in its native columnar form
+(:class:`~repro.traces.generator.TraceColumns`, straight from
+``generate_trace_columns``); the reference backend gets the materialized
+``Request`` objects. ``--pools 3`` swaps the classic short/long pair for
+the 4K/16K/64K three-pool topology, exercising the N-way routing path.
+
 CLI::
 
     python -m benchmarks.sim_throughput                   # 10k + 100k
     python -m benchmarks.sim_throughput --requests 1000   # CI smoke
+    python -m benchmarks.sim_throughput --requests 1000 --pools 3 \
+        --backends vectorized                             # N-pool smoke
     python -m benchmarks.sim_throughput --requests 1000000 \
         --backends vectorized                             # 1M, vector only
 
@@ -26,14 +34,41 @@ from __future__ import annotations
 import argparse
 import time
 
+from benchmarks.beyond_paper_threepool import (
+    analytic_profiles,
+    pool_configs,
+    thresholds_for,
+)
 from benchmarks.common import emit
 from repro.core.pools import PoolConfig, n_seq_for_cmax
 from repro.sim import A100_LLAMA3_70B, plan_fleet, run_fleet
-from repro.traces import TraceSpec, generate_trace
+from repro.traces import TraceSpec, generate_trace_columns
 
 #: Arrival rate per 10k trace requests — keeps sim duration ≈ 100 s and the
 #: planned fleet shape constant across scales.
 RATE_PER_10K = 100.0
+
+
+def build_pools(cols, rate: float, n_pools: int):
+    """Pool topology + routing thresholds for the benchmark fleet."""
+    if n_pools == 2:
+        plan = plan_fleet("azure", cols.to_requests(), A100_LLAMA3_70B, rate)
+        return {
+            "short": (
+                PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
+                plan.short.instances,
+            ),
+            "long": (
+                PoolConfig("long", 65_536, 16, headroom=1.02),
+                plan.long.instances,
+            ),
+        }, None
+    profiles = analytic_profiles(cols, n_pools, rate, cols.true_total)
+    pools = {
+        p.pool: (cfg, max(1, p.instances))
+        for cfg, p in zip(pool_configs(n_pools), profiles)
+    }
+    return pools, list(thresholds_for(n_pools))
 
 
 def bench_scale(
@@ -42,23 +77,17 @@ def bench_scale(
     *,
     seed: int = 42,
     warmup: bool = True,
+    n_pools: int = 2,
 ) -> dict[str, float]:
     """Run one trace size through each backend; returns wall seconds each."""
     rate = max(50.0, RATE_PER_10K * num_requests / 10_000)
-    trace = generate_trace(
+    cols = generate_trace_columns(
         TraceSpec(trace="azure", num_requests=num_requests, rate=rate, seed=seed)
     )
-    plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
-    pools = {
-        "short": (
-            PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
-            plan.short.instances,
-        ),
-        "long": (
-            PoolConfig("long", 65_536, 16, headroom=1.02),
-            plan.long.instances,
-        ),
-    }
+    pools, thresholds = build_pools(cols, rate, n_pools)
+    # Materialize objects once, outside the timing, for the reference
+    # backend; the vectorized backend consumes the columns natively.
+    reqs = cols.to_requests() if "reference" in backends else None
 
     if warmup and "vectorized" in backends:
         # JIT-compile the routing/calibration kernels outside the timing.
@@ -66,20 +95,25 @@ def bench_scale(
         # to reach the full 2048-wide padded route-kernel shape; 4096
         # covers every shape the timed run will use.
         run_fleet(
-            trace[: min(len(trace), 4096)],
+            cols.head(min(len(cols), 4096)),
             pools,
             A100_LLAMA3_70B,
             backend="vectorized",
+            thresholds=thresholds,
         )
 
+    tag = "" if n_pools == 2 else f"/pools={n_pools}"
     walls: dict[str, float] = {}
     for backend in backends:
+        trace = cols if backend == "vectorized" else reqs
         t0 = time.perf_counter()
-        res = run_fleet(trace, pools, A100_LLAMA3_70B, backend=backend)
+        res = run_fleet(
+            trace, pools, A100_LLAMA3_70B, backend=backend, thresholds=thresholds
+        )
         wall = time.perf_counter() - t0
         walls[backend] = wall
         emit(
-            f"sim_throughput/{backend}/n={num_requests}",
+            f"sim_throughput/{backend}/n={num_requests}{tag}",
             wall * 1e6,
             f"req_per_s={num_requests / wall:.0f};completed={res.summary.completed};"
             f"rejected={res.summary.rejected};preempt={res.preemptions};"
@@ -87,7 +121,7 @@ def bench_scale(
         )
     if "reference" in walls and "vectorized" in walls:
         emit(
-            f"sim_throughput/speedup/n={num_requests}",
+            f"sim_throughput/speedup/n={num_requests}{tag}",
             0.0,
             f"x{walls['reference'] / walls['vectorized']:.1f}",
         )
@@ -99,9 +133,11 @@ def run() -> None:
 
     Both backends at 10k; vectorized-only at 100k (the reference backend
     needs ~30 min there — run it explicitly via the CLI when you want the
-    full-scale speedup number).
+    full-scale speedup number); a 10k three-pool vectorized run covers the
+    N-way routing path.
     """
     bench_scale(10_000)
+    bench_scale(10_000, ("vectorized",), n_pools=3)
     bench_scale(100_000, ("vectorized",))
 
 
@@ -121,6 +157,13 @@ def main() -> None:
         help="comma-separated subset of reference,vectorized "
         "(default: both, vectorized-only at ≥1M)",
     )
+    parser.add_argument(
+        "--pools",
+        type=int,
+        default=2,
+        choices=(1, 2, 3),
+        help="pool topology: 2 = short/long (default), 3 = 4K/16K/64K",
+    )
     parser.add_argument("--seed", type=int, default=42)
     args = parser.parse_args()
     for n in args.requests:
@@ -130,7 +173,7 @@ def main() -> None:
             backends = (
                 ("vectorized",) if n >= 1_000_000 else ("reference", "vectorized")
             )
-        bench_scale(n, backends, seed=args.seed)
+        bench_scale(n, backends, seed=args.seed, n_pools=args.pools)
 
 
 if __name__ == "__main__":

@@ -3,8 +3,9 @@
 Public API:
 
 * ``EmaCalibrator`` / ``CalibState`` — self-calibrating bytes-per-token EMA.
-* ``TokenBudgetRouter`` / ``Request`` — Algorithm 1 dispatch.
-* ``PoolConfig`` / ``short_pool`` / ``long_pool`` — pool definitions.
+* ``TokenBudgetRouter`` / ``Request`` — Algorithm 1 dispatch (N-pool).
+* ``PoolConfig`` / ``PoolSet`` / ``short_pool`` / ``long_pool`` — pool
+  definitions and the budget-ordered pool family.
 * ``closed_form_savings`` / ``corrected_savings`` — Eq. 7 / Eq. 8.
 """
 
@@ -43,6 +44,7 @@ from repro.core.pools import (
     KV_BLOCK_TOKENS,
     TOTAL_KV_BLOCKS,
     PoolConfig,
+    PoolSet,
     PoolState,
     dual_pool_fleet,
     fleet_instances,
@@ -87,6 +89,7 @@ __all__ = [
     "homogeneous_fleet",
     "mi300x_case_study",
     "PoolConfig",
+    "PoolSet",
     "PoolState",
     "KV_BLOCK_TOKENS",
     "TOTAL_KV_BLOCKS",

@@ -1,15 +1,20 @@
 """Pool configuration and fleet sizing (paper §2, §3, Table 1).
 
-A *pool* is a set of identically-configured serving instances. The two-pool
-design (paper §8: "start with two pools") is the default, but the types below
-support N pools so the three-pool ablation can be expressed.
+A *pool* is a set of identically-configured serving instances. The paper's
+two-pool design (§8: "start with two pools") is the P=2 member of the
+budget-ordered pool family modelled by :class:`PoolSet`: P pools sorted by
+``C_max`` with routing thresholds ``B_1 < … < B_{P-1}``. The router, both
+simulator backends, and the three-pool ablation all operate on a PoolSet.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from typing import Sequence
+
+import numpy as np
 
 #: vLLM-style fixed KV block size in tokens (paper §3, effect 3 / Appendix A).
 KV_BLOCK_TOKENS = 16
@@ -95,12 +100,110 @@ class PoolState:
 
     @property
     def overloaded(self) -> bool:
+        # Inlined in TokenBudgetRouter.route()'s spill pre-check (the
+        # sub-µs dispatch path) — change both together.
         return self.queue_depth > self.config.queue_limit * self.num_instances
 
     @property
     def utilization_slots(self) -> float:
         cap = max(1, self.num_instances * self.config.n_seq)
         return self.active / cap
+
+
+class PoolSet:
+    """Budget-ordered pools ``P_1 … P_P`` with thresholds ``B_1 < … < B_{P-1}``.
+
+    The routing rule of Algorithm 1, generalized to N pools: a request with
+    estimated budget ``L`` statically targets the first pool ``k`` with
+    ``L ≤ B_k`` (the last pool when ``L`` exceeds every threshold). Each
+    threshold is bounded by its pool's context window (``B_k ≤ C_max,k``),
+    so a static target below the last pool always admits the request.
+
+    Pools are sorted by ``C_max`` at construction (stable, so equal-capacity
+    pools keep caller order); ``thresholds`` stays a mutable array because
+    the adaptive controller moves boundaries at runtime
+    (:class:`repro.core.adaptive.AdaptiveThreshold`).
+    """
+
+    def __init__(
+        self, states: Sequence["PoolState"], thresholds: Sequence[int]
+    ) -> None:
+        states = list(states)
+        validate_pools([s.config for s in states])
+        order = sorted(range(len(states)), key=lambda i: states[i].config.c_max)
+        self.states: list[PoolState] = [states[i] for i in order]
+        self.configs: list[PoolConfig] = [s.config for s in self.states]
+        self.names: list[str] = [c.name for c in self.configs]
+        if len(thresholds) != len(states) - 1:
+            raise ValueError(
+                f"{len(states)} pools need {len(states) - 1} thresholds, "
+                f"got {len(thresholds)}"
+            )
+        # Plain int list for the O(1)/O(log P) scalar dispatch hot path
+        # (bisect beats an np.searchsorted call by ~5× per request);
+        # `thresholds` exposes the same values as an array for the batch
+        # kernel and stays the mutation point for adaptive control.
+        self._thresholds = [int(b) for b in thresholds]
+        self._validate_thresholds()
+        # Spillover candidate order per target pool, precomputed: by
+        # distance from the target, larger-capacity neighbour preferred on
+        # ties — the safer direction under the paper's asymmetric error
+        # costs.
+        p = len(self.states)
+        self._spill_orders = [
+            sorted(
+                (k for k in range(p) if k != idx),
+                key=lambda k: (abs(k - idx), -k),
+            )
+            for idx in range(p)
+        ]
+
+    def _validate_thresholds(self) -> None:
+        th = self._thresholds
+        if th and th[0] <= 0:
+            raise ValueError(f"thresholds must be positive: {th}")
+        if any(nxt <= prev for nxt, prev in zip(th[1:], th)):
+            raise ValueError(f"thresholds must be strictly increasing: {th}")
+        for k, b in enumerate(th):
+            if b > self.configs[k].c_max:
+                raise ValueError(
+                    f"B_{k + 1}={b} exceeds pool "
+                    f"{self.names[k]!r} C_max={self.configs[k].c_max}"
+                )
+
+    def __len__(self) -> int:
+        return len(self.states)
+
+    @property
+    def thresholds(self) -> np.ndarray:
+        """(P-1,) int64 boundaries, for the vectorized routing kernel."""
+        return np.asarray(self._thresholds, dtype=np.int64)
+
+    def set_threshold(self, k: int, value: int) -> None:
+        """Move one boundary (adaptive control), re-validating the order."""
+        old = self._thresholds[k]
+        self._thresholds[k] = int(value)
+        try:
+            self._validate_thresholds()
+        except ValueError:
+            self._thresholds[k] = old
+            raise
+
+    def static_pool(self, budget: int) -> int:
+        """Threshold search: first pool index whose ``B_k`` covers ``budget``."""
+        return bisect.bisect_left(self._thresholds, budget)
+
+    def first_feasible(self, idx: int, budget: int) -> int:
+        """Hard-constraint escalation: the nearest pool at or above ``idx``
+        that admits ``budget`` (the last pool when none does)."""
+        last = len(self.states) - 1
+        while idx < last and not self.configs[idx].admits(budget):
+            idx += 1
+        return idx
+
+    def spill_order(self, idx: int) -> list[int]:
+        """Spillover candidates for a request targeting pool ``idx``."""
+        return self._spill_orders[idx]
 
 
 def fleet_instances(

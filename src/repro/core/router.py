@@ -1,22 +1,30 @@
-"""Token-budget pool dispatch (paper §2.2, Algorithm 1).
+"""Token-budget pool dispatch (paper §2.2, Algorithm 1), N-pool form.
 
-The dispatch is three comparisons and a queue-depth lookup — O(1). The
-router never needs a tokenizer: the byte length |r| plus the calibrated
-per-category ratio gives the input-token estimate, and the request's own
-``max_output_tokens`` cap gives the output term.
+The dispatch is a threshold search plus a queue-depth lookup — O(log P) over
+P budget-ordered pools, O(1) for the paper's P=2. The router never needs a
+tokenizer: the byte length |r| plus the calibrated per-category ratio gives
+the input-token estimate, and the request's own ``max_output_tokens`` cap
+gives the output term.
+
+The paper's short/long pair is the P=2 member of a :class:`~repro.core.pools.PoolSet`
+family (pools sorted by ``C_max``, thresholds ``B_1 < … < B_{P-1}``); the
+two-pool constructor signature is kept as a thin compatibility layer.
 
 Two paths:
 
-* :class:`TokenBudgetRouter` — host-side production dispatch (scalar, O(1)).
+* :class:`TokenBudgetRouter` — host-side production dispatch (scalar).
 * :func:`jax_route_batch` — vectorized JAX routing of a whole request batch
   (used for trace re-simulation and the sensitivity sweeps, where millions of
-  routing decisions are evaluated at once).
+  routing decisions are evaluated at once). Returns integer pool ids into the
+  budget-ordered pool family.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from bisect import bisect_left
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +36,7 @@ from repro.core.calibration import (
     EmaCalibrator,
     jax_estimate_budget,
 )
-from repro.core.pools import PoolConfig, PoolState, validate_pools
+from repro.core.pools import PoolSet, PoolState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,70 +63,121 @@ class RouteDecision:
     estimated_total: int
     spilled: bool
     conservative_ratio: float
+    pool_index: int = -1  # index into the budget-ordered PoolSet
 
 
 class TokenBudgetRouter:
-    """Algorithm 1: token-budget pool dispatch with closed-loop calibration."""
+    """Algorithm 1: token-budget pool dispatch with closed-loop calibration.
+
+    Routes over a budget-ordered :class:`~repro.core.pools.PoolSet`: the
+    static target is a threshold search, the hard constraint escalates to
+    the nearest feasible pool, and load-aware spillover redirects to the
+    nearest non-overloaded pool that admits the budget. The original
+    two-positional-argument ``(short, long, b_short=…)`` form builds the
+    equivalent P=2 PoolSet.
+    """
 
     def __init__(
         self,
-        short: PoolState,
-        long: PoolState,
+        short: Optional[PoolState] = None,
+        long: Optional[PoolState] = None,
         *,
+        pools: Optional[PoolSet] = None,
         b_short: int = 8192,
         calibrator: Optional[EmaCalibrator] = None,
         spillover: bool = True,
     ) -> None:
-        validate_pools([short.config, long.config])
-        if short.config.c_max > long.config.c_max:
-            raise ValueError("short pool must have the smaller C_max")
-        if b_short > short.config.c_max:
-            raise ValueError(
-                f"B_short={b_short} exceeds short-pool C_max={short.config.c_max}"
-            )
-        self.short = short
-        self.long = long
-        self.b_short = b_short
+        if pools is not None:
+            if short is not None or long is not None:
+                raise ValueError("pass either (short, long) or pools=, not both")
+            self.pools = pools
+        else:
+            if short is None or long is None:
+                raise ValueError("need a PoolSet or a (short, long) pool pair")
+            if short.config.c_max > long.config.c_max:
+                raise ValueError("short pool must have the smaller C_max")
+            if b_short > short.config.c_max:
+                raise ValueError(
+                    f"B_short={b_short} exceeds short-pool C_max={short.config.c_max}"
+                )
+            self.pools = PoolSet([short, long], [b_short])
         self.calibrator = calibrator or EmaCalibrator()
         self.spillover = spillover
         # Dispatch statistics (observability; §8 "monitor preemption").
-        self.routed = {"short": 0, "long": 0}
+        self.routed = {name: 0 for name in self.pools.names}
         self.spill_count = 0
+        # Hot-path caches: the scalar dispatch must stay a few comparisons
+        # (§2.2), so route() avoids attribute chains and property calls.
+        # `_th` aliases the PoolSet's live threshold list — set_threshold
+        # mutates it in place, so adaptive control stays visible here.
+        self._th = self.pools._thresholds
+        self._states = self.pools.states
+        self._names = self.pools.names
+        self._last = len(self._states) - 1
+
+    # -- compatibility views --------------------------------------------------
+    @property
+    def short(self) -> PoolState:
+        """Smallest-budget pool (P=2 compatibility view)."""
+        return self.pools.states[0]
+
+    @property
+    def long(self) -> PoolState:
+        """Largest-budget pool (P=2 compatibility view)."""
+        return self.pools.states[-1]
+
+    @property
+    def b_short(self) -> int:
+        """First routing threshold ``B_1`` (P=2 compatibility view)."""
+        return int(self.pools.thresholds[0])
+
+    @b_short.setter
+    def b_short(self, value: int) -> None:
+        self.pools.set_threshold(0, value)
 
     # -- dispatch (Algorithm 1 lines 1–14) ----------------------------------
     def route(self, request: Request) -> RouteDecision:
+        # Eq. 3/5 estimate — inlined EmaCalibrator.estimate_total_budget
+        # with one ratio lookup serving both terms — then the threshold
+        # search. B_k ≤ C_max,k guarantees the static target admits the
+        # budget, so the escalation loop lives only in the batched-decision
+        # replay (route_decided) and the spill tail.
         c_star = self.calibrator.conservative_ratio(request.category)
-        l_total = self.calibrator.estimate_total_budget(
-            request.byte_len, request.max_output_tokens, request.category
+        l_total = (
+            math.ceil(request.byte_len / c_star) + request.max_output_tokens
         )
-
-        # Hard constraint: exceeds short pool capacity → long pool, no spill.
-        if not self.short.config.admits(l_total):
-            self.routed["long"] += 1
-            return RouteDecision("long", l_total, False, c_star)
-
-        # Budget-based dispatch.
-        target, alternate = (
-            (self.short, self.long)
-            if l_total <= self.b_short
-            else (self.long, self.short)
-        )
-
-        # Load-aware spillover: redirect when the target is overloaded and
-        # the alternate can serve the request (hard constraint re-checked).
+        idx = bisect_left(self._th, l_total)
         spilled = False
+        state = self._states[idx]
+        # Inlined PoolState.overloaded (property calls cost ~15% of the
+        # dispatch budget); _finalize re-checks it via the property.
         if (
             self.spillover
-            and target.overloaded
-            and not alternate.overloaded
-            and alternate.config.admits(l_total)
+            and state.queue_depth
+            > state.config.queue_limit * state.num_instances
         ):
-            target = alternate
-            spilled = True
-            self.spill_count += 1
+            idx, spilled = self._finalize(idx, l_total)
+        name = self._names[idx]
+        self.routed[name] += 1
+        return RouteDecision(name, l_total, spilled, c_star, pool_index=idx)
 
-        self.routed[target.config.name] += 1
-        return RouteDecision(target.config.name, l_total, spilled, c_star)
+    def _finalize(self, idx: int, budget: int) -> tuple[int, bool]:
+        """Load-dependent tail of Algorithm 1 (lines 8–14), N-pool form.
+
+        Hard-constraint escalation to the nearest feasible pool, then
+        load-aware spillover to the nearest non-overloaded pool that admits
+        the budget (so a request can never spill into a pool whose context
+        window it exceeds).
+        """
+        idx = self.pools.first_feasible(idx, budget)
+        if not (self.spillover and self.pools.states[idx].overloaded):
+            return idx, False
+        for k in self.pools.spill_order(idx):
+            alt = self.pools.states[k]
+            if not alt.overloaded and alt.config.admits(budget):
+                self.spill_count += 1
+                return k, True
+        return idx, False
 
     # -- feedback (Algorithm 1 lines 15–19) ---------------------------------
     def on_response(self, request: Request, prompt_tokens: int) -> None:
@@ -133,28 +192,12 @@ class TokenBudgetRouter:
         """Finalize one batched decision against live pool state.
 
         Replays the load-dependent tail of Algorithm 1 (hard-constraint
-        override and spillover, lines 8–14) for a static short/long choice
-        produced by :meth:`route_batch`, updating the routed/spill counters
-        exactly like :meth:`route`. Returns the target pool name.
+        escalation and spillover) for a static pool index produced by
+        :meth:`route_batch`, updating the routed/spill counters exactly
+        like :meth:`route`. Returns the target pool name.
         """
-        if not self.short.config.admits(budget):
-            # Beyond short C_max → long pool, no spill (as in route()).
-            self.routed["long"] += 1
-            return "long"
-        target, alternate = (
-            (self.short, self.long)
-            if pool_id == SHORT
-            else (self.long, self.short)
-        )
-        if (
-            self.spillover
-            and target.overloaded
-            and not alternate.overloaded
-            and alternate.config.admits(budget)
-        ):
-            target = alternate
-            self.spill_count += 1
-        name = target.config.name
+        idx, _ = self._finalize(int(pool_id), int(budget))
+        name = self.pools.names[idx]
         self.routed[name] += 1
         return name
 
@@ -162,15 +205,20 @@ class TokenBudgetRouter:
     def route_batch(self, byte_lens, max_output_tokens, categories):
         """Route a whole arrival batch with :func:`jax_route_batch`.
 
-        Returns ``(pool_ids, budgets)`` as NumPy arrays (0=short, 1=long).
-        The static decision uses the calibrator state as of the call —
-        load-dependent spillover and the routed/spill counters stay with the
-        caller, which sees live queue depths at each arrival's actual
-        dispatch time.
+        Returns ``(pool_ids, budgets)`` as NumPy arrays of length
+        ``len(byte_lens)``; pool ids index the budget-ordered PoolSet
+        (0 = smallest budget). The static decision uses the calibrator
+        state as of the call — load-dependent spillover and the
+        routed/spill counters stay with the caller
+        (:meth:`route_decided`), which sees live queue depths at each
+        arrival's actual dispatch time.
+
+        Inputs are padded to the next power of two so JAX compiles the
+        routing kernel for a handful of shapes instead of one per ragged
+        final epoch; the pad rows are sliced off *here*, before any
+        caller can feed them into dispatch counters or EMA feedback.
         """
         n = len(byte_lens)
-        # Pad to the next power of two so JAX compiles the routing kernel
-        # for a handful of shapes instead of one per ragged final epoch.
         padded = 1 << max(0, (n - 1).bit_length())
         pad = padded - n
         b = jnp.asarray(np.pad(np.asarray(byte_lens), (0, pad)), jnp.int32)
@@ -183,40 +231,40 @@ class TokenBudgetRouter:
             b,
             m,
             k,
-            short_cmax=self.short.config.c_max,
-            b_short=self.b_short,
+            thresholds=self.pools.thresholds,
             gamma=self.calibrator.gamma,
         )
         return np.asarray(pools)[:n], np.asarray(budgets)[:n]
 
     # -- observability -------------------------------------------------------
     def stats(self) -> dict:
-        total = max(1, self.routed["short"] + self.routed["long"])
-        return {
-            "routed_short": self.routed["short"],
-            "routed_long": self.routed["long"],
-            "short_fraction": self.routed["short"] / total,
+        total = max(1, sum(self.routed.values()))
+        out = {
+            "routed": dict(self.routed),
+            "fractions": {n: c / total for n, c in self.routed.items()},
             "spill_count": self.spill_count,
             "calibration": self.calibrator.snapshot(),
         }
+        if len(self.pools) == 2:
+            first, last = self.pools.names[0], self.pools.names[-1]
+            out["routed_short"] = self.routed[first]
+            out["routed_long"] = self.routed[last]
+            out["short_fraction"] = self.routed[first] / total
+        return out
 
 
 # ---------------------------------------------------------------------------
 # Vectorized JAX batch routing
 # ---------------------------------------------------------------------------
 
+#: Pool ids of the paper's P=2 topology (indices into the ordered PoolSet).
 SHORT, LONG = 0, 1
 
 
 @jax.jit
-def _route_kernel(
-    budgets: jax.Array,
-    short_cmax: jax.Array,
-    b_short: jax.Array,
-) -> jax.Array:
-    exceeds = budgets > short_cmax
-    long_budget = budgets > b_short
-    return jnp.where(exceeds | long_budget, LONG, SHORT).astype(jnp.int32)
+def _route_kernel(budgets: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """N-way threshold search: pool k serves budgets in (B_k, B_{k+1}]."""
+    return jnp.searchsorted(thresholds, budgets, side="left").astype(jnp.int32)
 
 
 def jax_route_batch(
@@ -225,19 +273,25 @@ def jax_route_batch(
     max_output_tokens: jax.Array,
     categories: jax.Array,
     *,
+    thresholds: Optional[Sequence[int]] = None,
     short_cmax: int = 8192,
     b_short: int = 8192,
     gamma: float = DEFAULT_GAMMA,
 ) -> tuple[jax.Array, jax.Array]:
     """Route a whole batch at once. Returns (pool_ids, estimated_budgets).
 
-    pool_ids: (N,) int32 with 0=short, 1=long. Spillover is a load-dependent
-    runtime concern and is not part of the static batch decision.
+    pool_ids: (N,) int32 indices into the budget-ordered pool family —
+    ``searchsorted`` over ``thresholds`` (``B_1 < … < B_{P-1}``), so
+    0 is the smallest pool and P-1 the largest. With the default two-pool
+    ``thresholds=None`` form the ids are exactly ``SHORT``/``LONG`` and the
+    boundary is ``min(b_short, short_cmax)`` (the hard constraint folds into
+    the threshold because B_short ≤ short C_max). Spillover is a
+    load-dependent runtime concern and is not part of the static decision.
     """
     budgets = jax_estimate_budget(
         state, byte_lens, max_output_tokens, categories, gamma=gamma
     )
-    pools = _route_kernel(
-        budgets, jnp.int32(short_cmax), jnp.int32(b_short)
-    )
-    return pools, budgets
+    if thresholds is None:
+        thresholds = [min(b_short, short_cmax)]
+    th = jnp.asarray(np.asarray(thresholds), jnp.int32)
+    return _route_kernel(budgets, th), budgets

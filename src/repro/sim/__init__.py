@@ -7,9 +7,14 @@ Two interchangeable fleet backends (``FleetSim(backend=...)``):
   object per sequence; ground truth for unit tests.
 * ``"vectorized"`` — struct-of-arrays engine
   (:mod:`repro.sim.vector_engine`): all instances of a pool step together
-  in masked NumPy ops with event-distance jumps, epoch-batched JAX routing
-  and EMA sync; 10×+ faster at fleet scale (``benchmarks/sim_throughput.py``)
-  and behaviourally equivalent (``tests/test_vector_engine.py``).
+  in masked NumPy ops with event-distance jumps, epoch-batched N-way JAX
+  routing and EMA sync, consuming traces natively as
+  :class:`~repro.traces.generator.TraceColumns`; 10×+ faster at fleet
+  scale (``benchmarks/sim_throughput.py``) and behaviourally equivalent
+  (``tests/test_vector_engine.py``).
+
+Fleets route over a budget-ordered :class:`~repro.core.pools.PoolSet` —
+any pool count, the paper's short/long pair being P=2.
 """
 
 from repro.sim.engine import InstanceSim
@@ -17,6 +22,7 @@ from repro.sim.fleet import FleetResult, FleetSim, PoolSim, run_fleet
 from repro.sim.metrics import (
     RequestRecord,
     SimSummary,
+    concat_record_columns,
     percentile,
     summarize,
     summarize_columns,
@@ -47,6 +53,7 @@ __all__ = [
     "run_fleet",
     "RequestRecord",
     "SimSummary",
+    "concat_record_columns",
     "percentile",
     "summarize",
     "summarize_columns",

@@ -2,7 +2,9 @@
 
 Drives N instances per pool plus the token-budget router over a trace:
 
-* arrivals are routed with Algorithm 1 (calibrated estimates + spillover,
+* arrivals are routed with Algorithm 1 over a budget-ordered
+  :class:`~repro.core.pools.PoolSet` — any number of pools, the paper's
+  short/long pair being the P=2 case (calibrated estimates + spillover,
   reading live queue depths);
 * each instance runs the iteration-level engine; instance wake-ups are a
   single heapq (reference backend) or a coalesced per-pool sweep
@@ -20,12 +22,19 @@ Two interchangeable backends behind ``FleetSim(backend=...)``:
     The struct-of-arrays engine of :mod:`repro.sim.vector_engine` — all
     instances of a pool step together in masked NumPy ops, instances that
     share a wake-up epoch advance in one coalesced round, routing happens
-    per-epoch through :func:`repro.core.router.jax_route_batch`, and EMA
-    calibration feedback syncs once per epoch
-    (:meth:`repro.core.calibration.EmaCalibrator.observe_batch`).
-    ~10–100× faster at fleet scale; behaviourally equivalent (exactly so
-    for routerless pools, within-calibration-lag tolerance for two-pool
-    fleets) — see ``tests/test_vector_engine.py``.
+    per-epoch through :func:`repro.core.router.jax_route_batch` (N-way
+    integer pool ids), and EMA calibration feedback syncs once per epoch
+    (:meth:`repro.core.calibration.EmaCalibrator.observe_batch`). Traces
+    are consumed natively in columnar form
+    (:class:`~repro.traces.generator.TraceColumns`) — no per-request
+    ``Request`` objects on the hot path. ~10–100× faster at fleet scale;
+    behaviourally equivalent (exactly so for routerless pools, within
+    calibration-lag tolerance for routed fleets) — see
+    ``tests/test_vector_engine.py``.
+
+Both backends accept either a ``Sequence[Request]`` or a ``TraceColumns``;
+the reference backend materializes objects from columns, the vectorized
+backend columnarizes an object list once at entry.
 
 The router reads O(1) ``PoolState`` counters that the engines maintain
 incrementally on every submit/admit/preempt/complete — dispatch never
@@ -40,22 +49,26 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.calibration import EmaCalibrator
-from repro.core.pools import PoolConfig, PoolState
+from repro.core.pools import PoolConfig, PoolSet, PoolState
 from repro.core.router import Request, TokenBudgetRouter
 from repro.sim.engine import InstanceSim
 from repro.sim.metrics import (
     RequestRecord,
     SimSummary,
+    concat_record_columns,
     summarize,
     summarize_columns,
 )
 from repro.sim.timing import TimingModel
 from repro.sim.vector_engine import VectorPoolSim
+from repro.traces.generator import TraceColumns
+
+Trace = Union[Sequence[Request], TraceColumns]
 
 
 class PoolSim:
@@ -120,7 +133,17 @@ class FleetResult:
 
 
 class FleetSim:
-    """Token-budget-routed fleet (or a single homogeneous pool)."""
+    """Token-budget-routed fleet over any budget-ordered pool topology.
+
+    ``pools`` maps pool name → ``(PoolConfig, num_instances)``. One pool
+    runs routerless (the homogeneous baseline); two or more pools get a
+    :class:`~repro.core.router.TokenBudgetRouter` over the budget-ordered
+    :class:`~repro.core.pools.PoolSet`. Routing thresholds come from
+    ``thresholds`` (ascending, one fewer than the pool count); when omitted
+    they default to each non-last pool's ``C_max`` — except for the classic
+    ``{"short", "long"}`` pair, where ``b_short`` keeps its original
+    meaning as the single boundary.
+    """
 
     def __init__(
         self,
@@ -128,6 +151,7 @@ class FleetSim:
         timing: TimingModel,
         *,
         b_short: int = 8192,
+        thresholds: Optional[Sequence[int]] = None,
         calibrator: Optional[EmaCalibrator] = None,
         spillover: bool = True,
         backend: str = "reference",
@@ -156,11 +180,18 @@ class FleetSim:
                 name: PoolSim(cfg, n, timing) for name, (cfg, n) in pools.items()
             }
         self.router: Optional[TokenBudgetRouter] = None
-        if "short" in self.pools and "long" in self.pools:
+        if len(self.pools) > 1:
+            states = sorted(
+                (p.state for p in self.pools.values()),
+                key=lambda s: s.config.c_max,
+            )
+            if thresholds is None:
+                if set(self.pools) == {"short", "long"}:
+                    thresholds = [b_short]
+                else:
+                    thresholds = [s.config.c_max for s in states[:-1]]
             self.router = TokenBudgetRouter(
-                self.pools["short"].state,
-                self.pools["long"].state,
-                b_short=b_short,
+                pools=PoolSet(states, thresholds),
                 calibrator=calibrator or EmaCalibrator(),
                 spillover=spillover,
             )
@@ -176,9 +207,11 @@ class FleetSim:
         return self.pools[decision.pool]
 
     # -- main loop -------------------------------------------------------------
-    def run(self, trace: Sequence[Request]) -> FleetResult:
+    def run(self, trace: Trace) -> FleetResult:
         if self.backend == "vectorized":
             return self._run_vectorized(trace)
+        if isinstance(trace, TraceColumns):
+            trace = trace.to_requests()
         return self._run_reference(trace)
 
     def _run_reference(self, trace: Sequence[Request]) -> FleetResult:
@@ -245,16 +278,15 @@ class FleetSim:
 
     def _dispatch_one(
         self,
-        request: Request,
         pool_ids: Optional[np.ndarray],
         budgets: Optional[np.ndarray],
         j: int,
     ):
         """Pick the target pool for one arrival (vectorized backend).
 
-        The static short/long decision comes from the epoch's
-        ``route_batch`` call; the load-dependent tail of Algorithm 1
-        (hard-constraint override, spillover, counters) is the router's
+        The static N-way decision comes from the epoch's ``route_batch``
+        call; the load-dependent tail of Algorithm 1 (hard-constraint
+        escalation, spillover, counters) is the router's
         :meth:`~repro.core.router.TokenBudgetRouter.route_decided`, shared
         with the scalar dispatch path.
         """
@@ -265,23 +297,27 @@ class FleetSim:
         return self.pools[name]
 
     # -- vectorized loop -------------------------------------------------------
-    def _run_vectorized(self, trace: Sequence[Request]) -> FleetResult:
-        arrivals = sorted(trace, key=lambda r: r.arrival_time)
+    def _run_vectorized(self, trace: Trace) -> FleetResult:
+        cols = (
+            trace
+            if isinstance(trace, TraceColumns)
+            else TraceColumns.from_requests(trace)
+        ).sorted_by_arrival()
         pools = list(self.pools.values())
         router = self.router
 
-        # Request-id → routing observables, for epoch-batched EMA feedback.
-        ids = np.asarray([r.request_id for r in arrivals], dtype=np.int64)
+        # Routing observables stay columnar end-to-end: the epoch router
+        # batches and the EMA feedback joins below index straight into the
+        # trace arrays — no Request objects anywhere on this path.
+        ids = cols.request_id
         id_order = np.argsort(ids, kind="stable")
         ids_sorted = ids[id_order]
-        byte_by = np.asarray([r.byte_len for r in arrivals], dtype=np.int64)
-        inp_by = np.asarray(
-            [r.true_input_tokens for r in arrivals], dtype=np.int64
-        )
-        cat_by = np.asarray([r.category for r in arrivals], dtype=np.int64)
-        mot_by = np.asarray(
-            [r.max_output_tokens for r in arrivals], dtype=np.int64
-        )
+        arrival = cols.arrival_time
+        byte_by = cols.byte_len
+        inp_by = cols.true_input_tokens
+        out_by = cols.true_output_tokens
+        cat_by = cols.category
+        mot_by = cols.max_output_tokens
 
         def feedback() -> None:
             done = [p.drain_completed_ids() for p in pools]
@@ -301,45 +337,49 @@ class FleetSim:
 
         wake_min = np.inf
 
+        n = len(cols)
         pos = 0
         pool_ids = budgets = None
         # Ramp the epoch size (64 → self.epoch): the first requests route
         # with the cold-start calibrator, so sync feedback frequently until
         # the EMA has converged — otherwise early long prompts get
-        # underestimated, mis-routed to the short pool, and hard-rejected
+        # underestimated, mis-routed to a too-small pool, and hard-rejected
         # where the per-request reference path would have served them.
         chunk_size = min(64, self.epoch)
-        while pos < len(arrivals):
+        while pos < n:
             start = pos
-            chunk = arrivals[pos : pos + chunk_size]
-            pos += len(chunk)
+            pos = min(n, pos + chunk_size)
             chunk_size = min(self.epoch, chunk_size * 2)
             if router is not None:
                 # Epoch-batched Algorithm 1: one jitted routing call per
                 # chunk, using the calibration state as of the epoch start
-                # and the whole-trace columns built above.
+                # and the whole-trace columns built above. route_batch
+                # slices its shape-padding off before returning, so only
+                # the chunk's real arrivals reach dispatch below.
                 pool_ids, budgets = router.route_batch(
                     byte_by[start:pos], mot_by[start:pos], cat_by[start:pos]
                 )
-            j = 0
-            while j < len(chunk):
+            j = start
+            while j < pos:
                 # Coalesce arrivals sharing one wake-up epoch: one sweep
                 # serves the whole window, so due instances step together.
-                horizon = chunk[j].arrival_time + self.coalesce_dt
-                jend = j + 1
-                while (
-                    jend < len(chunk)
-                    and chunk[jend].arrival_time <= horizon
-                ):
-                    jend += 1
-                t_sync = chunk[jend - 1].arrival_time
+                horizon = arrival[j] + self.coalesce_dt
+                jend = j + int(
+                    np.searchsorted(arrival[j:pos], horizon, side="right")
+                )
+                jend = max(jend, j + 1)
+                t_sync = arrival[jend - 1]
                 if t_sync > wake_min:
                     wake_min = sweep_all(t_sync)
                 for jj in range(j, jend):
-                    request = chunk[jj]
-                    pool = self._dispatch_one(request, pool_ids, budgets, jj)
-                    if pool.submit(
-                        pool.least_loaded(), request, request.arrival_time
+                    pool = self._dispatch_one(pool_ids, budgets, jj - start)
+                    if pool.submit_raw(
+                        pool.least_loaded(),
+                        int(ids[jj]),
+                        float(arrival[jj]),
+                        int(inp_by[jj]),
+                        int(out_by[jj]),
+                        float(arrival[jj]),
                     ):
                         wake_min = min(wake_min, pool.wake_min)
                 j = jend
@@ -349,17 +389,14 @@ class FleetSim:
         sweep_all(np.inf)
         feedback()
 
-        cols = {name: p.record_arrays() for name, p in self.pools.items()}
-        fleet_cols = {
-            k: np.concatenate([c[k] for c in cols.values()])
-            for k in next(iter(cols.values()))
-        }
+        per_pool_cols = {name: p.record_arrays() for name, p in self.pools.items()}
+        fleet_cols = concat_record_columns(list(per_pool_cols.values()))
         spills = router.spill_count if router else 0
         return FleetResult(
             summary=summarize_columns("fleet", fleet_cols, total_spills=spills),
             per_pool={
                 name: summarize_columns(name, c, total_spills=0)
-                for name, c in cols.items()
+                for name, c in per_pool_cols.items()
             },
             router_stats=router.stats() if router else {},
             preemptions=sum(p.preemptions for p in pools),
@@ -368,11 +405,12 @@ class FleetSim:
 
 
 def run_fleet(
-    trace: Sequence[Request],
+    trace: Trace,
     pools: dict[str, tuple[PoolConfig, int]],
     timing: TimingModel,
     *,
     b_short: int = 8192,
+    thresholds: Optional[Sequence[int]] = None,
     calibrator: Optional[EmaCalibrator] = None,
     spillover: bool = True,
     backend: str = "reference",
@@ -383,6 +421,7 @@ def run_fleet(
         pools,
         timing,
         b_short=b_short,
+        thresholds=thresholds,
         calibrator=calibrator,
         spillover=spillover,
         backend=backend,

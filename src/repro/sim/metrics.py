@@ -130,6 +130,22 @@ def _percentile_sorted(values: np.ndarray, q: float) -> float:
     return float(values[rank])
 
 
+def concat_record_columns(
+    column_maps: Sequence[Mapping[str, np.ndarray]],
+) -> dict[str, np.ndarray]:
+    """Merge per-pool record columns into one fleet-level column map.
+
+    Used by the fleet layer to aggregate any number of pools (the N-pool
+    generalization has no fixed pool count) without materializing records.
+    """
+    if not column_maps:
+        return {}
+    return {
+        key: np.concatenate([cols[key] for cols in column_maps])
+        for key in column_maps[0]
+    }
+
+
 def summarize_columns(
     name: str,
     cols: Mapping[str, np.ndarray],

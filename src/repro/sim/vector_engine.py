@@ -192,23 +192,35 @@ class VectorPoolSim:
         return int(np.argmin(self.load))
 
     def submit(self, instance: int, request: Request, now: float) -> bool:
-        """Enqueue on one instance; reject if the prompt exceeds C_max."""
-        if request.true_input_tokens >= self.config.c_max:
+        """Enqueue a Request object on one instance (reference-parity API)."""
+        return self.submit_raw(
+            instance,
+            request.request_id,
+            request.arrival_time,
+            request.true_input_tokens,
+            request.true_output_tokens,
+            now,
+        )
+
+    def submit_raw(
+        self,
+        instance: int,
+        request_id: int,
+        arrival: float,
+        true_input_tokens: int,
+        true_output_tokens: int,
+        now: float,
+    ) -> bool:
+        """Columnar-native enqueue (scalar fields, no Request object);
+        rejects if the prompt alone exceeds C_max."""
+        if true_input_tokens >= self.config.c_max:
             self.rejection_count += 1
             self._records.add_one(
-                request.request_id, request.arrival_time, now, now,
-                0, 0, False, True,
+                request_id, arrival, now, now, 0, 0, False, True,
             )
             return False
         self.queues[instance].append(
-            (
-                request.request_id,
-                request.arrival_time,
-                request.true_input_tokens,
-                request.true_output_tokens,
-                now,
-                0,
-            )
+            (request_id, arrival, true_input_tokens, true_output_tokens, now, 0)
         )
         self.queue_len[instance] += 1
         self.load[instance] += 1

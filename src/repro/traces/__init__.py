@@ -3,8 +3,10 @@
 from repro.traces.cdf import AZURE, LMSYS, TRACES, BucketCDF, describe, get_trace_cdf
 from repro.traces.generator import (
     CATEGORY_MIX,
+    TraceColumns,
     TraceSpec,
     generate_trace,
+    generate_trace_columns,
     short_fraction,
 )
 
@@ -16,7 +18,9 @@ __all__ = [
     "describe",
     "get_trace_cdf",
     "CATEGORY_MIX",
+    "TraceColumns",
     "TraceSpec",
     "generate_trace",
+    "generate_trace_columns",
     "short_fraction",
 ]

@@ -94,8 +94,104 @@ def _output_caps(
     raise ValueError(f"unknown cap style {style!r}")
 
 
-def generate_trace(spec: TraceSpec) -> list[Request]:
-    """Deterministic synthetic trace of routing-layer requests."""
+@dataclasses.dataclass
+class TraceColumns:
+    """Struct-of-arrays trace: one NumPy array per :class:`Request` field.
+
+    The native product of :func:`generate_trace_columns` and the native
+    input of the vectorized fleet backend — a million-request trace is
+    seven arrays, not a million Python objects. ``to_requests()`` /
+    ``from_requests()`` adapt to the reference backend's object form.
+    """
+
+    request_id: np.ndarray  # (N,) int64
+    byte_len: np.ndarray  # (N,) int64
+    max_output_tokens: np.ndarray  # (N,) int64
+    category: np.ndarray  # (N,) int64
+    arrival_time: np.ndarray  # (N,) float64
+    true_input_tokens: np.ndarray  # (N,) int64
+    true_output_tokens: np.ndarray  # (N,) int64
+
+    def __len__(self) -> int:
+        return len(self.request_id)
+
+    @property
+    def true_total(self) -> np.ndarray:
+        return self.true_input_tokens + self.true_output_tokens
+
+    def head(self, n: int) -> "TraceColumns":
+        """First ``n`` requests (views, no copy)."""
+        return TraceColumns(
+            **{
+                f.name: getattr(self, f.name)[:n]
+                for f in dataclasses.fields(self)
+            }
+        )
+
+    def sorted_by_arrival(self) -> "TraceColumns":
+        """Arrival-ordered view (no copy when already sorted, the normal
+        case for generator output — arrivals are a cumulative sum)."""
+        arr = self.arrival_time
+        if len(arr) < 2 or bool((arr[1:] >= arr[:-1]).all()):
+            return self
+        order = np.argsort(arr, kind="stable")
+        return TraceColumns(
+            **{
+                f.name: getattr(self, f.name)[order]
+                for f in dataclasses.fields(self)
+            }
+        )
+
+    def to_requests(self) -> list[Request]:
+        """Materialize :class:`Request` objects (reference backend)."""
+        return [
+            Request(
+                request_id=int(self.request_id[i]),
+                byte_len=int(self.byte_len[i]),
+                max_output_tokens=int(self.max_output_tokens[i]),
+                category=int(self.category[i]),
+                arrival_time=float(self.arrival_time[i]),
+                true_input_tokens=int(self.true_input_tokens[i]),
+                true_output_tokens=int(self.true_output_tokens[i]),
+            )
+            for i in range(len(self))
+        ]
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request]) -> "TraceColumns":
+        """Columnarize an object-form trace (adapter, not the hot path)."""
+        return cls(
+            request_id=np.fromiter(
+                (r.request_id for r in requests), np.int64, len(requests)
+            ),
+            byte_len=np.fromiter(
+                (r.byte_len for r in requests), np.int64, len(requests)
+            ),
+            max_output_tokens=np.fromiter(
+                (r.max_output_tokens for r in requests), np.int64, len(requests)
+            ),
+            category=np.fromiter(
+                (r.category for r in requests), np.int64, len(requests)
+            ),
+            arrival_time=np.fromiter(
+                (r.arrival_time for r in requests), np.float64, len(requests)
+            ),
+            true_input_tokens=np.fromiter(
+                (r.true_input_tokens for r in requests), np.int64, len(requests)
+            ),
+            true_output_tokens=np.fromiter(
+                (r.true_output_tokens for r in requests), np.int64, len(requests)
+            ),
+        )
+
+
+def generate_trace_columns(spec: TraceSpec) -> TraceColumns:
+    """Deterministic synthetic trace, columnar form (no Request objects).
+
+    Draws from the RNG in exactly the order :func:`generate_trace` always
+    has (arrival gaps, totals, split, categories, bytes, caps), so the two
+    paths are bit-identical for the same spec.
+    """
     cdf: BucketCDF = get_trace_cdf(spec.trace)
     rng = np.random.default_rng(spec.seed)
     n = spec.num_requests
@@ -108,22 +204,32 @@ def generate_trace(spec: TraceSpec) -> list[Request]:
     byte_lens = _synth_bytes(rng, l_in, cats)
     caps = _output_caps(rng, l_out, spec.cap_style)
 
-    return [
-        Request(
-            request_id=i,
-            byte_len=int(byte_lens[i]),
-            max_output_tokens=int(caps[i]),
-            category=int(cats[i]),
-            arrival_time=float(arrivals[i]),
-            true_input_tokens=int(l_in[i]),
-            true_output_tokens=int(l_out[i]),
-        )
-        for i in range(n)
-    ]
+    return TraceColumns(
+        request_id=np.arange(n, dtype=np.int64),
+        byte_len=byte_lens.astype(np.int64),
+        max_output_tokens=caps.astype(np.int64),
+        category=cats.astype(np.int64),
+        arrival_time=arrivals.astype(np.float64),
+        true_input_tokens=l_in.astype(np.int64),
+        true_output_tokens=l_out.astype(np.int64),
+    )
 
 
-def short_fraction(requests: Sequence[Request], b_short: int) -> float:
-    """Empirical α = fraction of requests with true total ≤ B_short."""
+def generate_trace(spec: TraceSpec) -> list[Request]:
+    """Deterministic synthetic trace of routing-layer requests (object form;
+    :func:`generate_trace_columns` is the columnar native path)."""
+    return generate_trace_columns(spec).to_requests()
+
+
+def short_fraction(requests, b_short: int) -> float:
+    """Empirical α = fraction of requests with true total ≤ B_short.
+
+    Accepts either a Request sequence or a :class:`TraceColumns`.
+    """
+    if isinstance(requests, TraceColumns):
+        if not len(requests):
+            return 0.0
+        return float((requests.true_total <= b_short).mean())
     if not requests:
         return 0.0
     hits = sum(1 for r in requests if r.true_total <= b_short)

@@ -9,6 +9,8 @@ from hypothesis import given, settings
 from repro.core import (
     CalibState,
     EmaCalibrator,
+    PoolConfig,
+    PoolSet,
     PoolState,
     Request,
     TokenBudgetRouter,
@@ -17,6 +19,7 @@ from repro.core import (
     jax_route_batch,
     jax_update_stream,
     long_pool,
+    n_seq_for_cmax,
     short_pool,
 )
 
@@ -192,6 +195,138 @@ class TestCalibration:
             jnp.array(cats, jnp.int32),
         )
         np.testing.assert_array_equal(np.asarray(pools) == 1, host)
+
+
+def _state(name, c_max, *, queue_limit=4):
+    return PoolState(
+        config=PoolConfig(
+            name, c_max, n_seq_for_cmax(c_max, max_slots=64),
+            queue_limit=queue_limit,
+        )
+    )
+
+
+def make_three_pool_router(spillover=True, queue_limit=4):
+    ps = PoolSet(
+        [
+            _state("p4k", 4096, queue_limit=queue_limit),
+            _state("p16k", 16_384, queue_limit=queue_limit),
+            _state("p64k", 65_536, queue_limit=queue_limit),
+        ],
+        [4096, 16_384],
+    )
+    return TokenBudgetRouter(pools=ps, spillover=spillover)
+
+
+class TestPoolSet:
+    def test_sorts_by_cmax(self):
+        ps = PoolSet(
+            [_state("big", 65_536), _state("small", 4096)], [4096]
+        )
+        assert ps.names == ["small", "big"]
+
+    def test_threshold_count_must_match(self):
+        with pytest.raises(ValueError):
+            PoolSet([_state("a", 4096), _state("b", 65_536)], [1024, 2048])
+
+    def test_thresholds_strictly_increasing(self):
+        states = [_state("a", 4096), _state("b", 16_384), _state("c", 65_536)]
+        with pytest.raises(ValueError):
+            PoolSet(states, [4096, 4096])
+
+    def test_threshold_bounded_by_pool_cmax(self):
+        with pytest.raises(ValueError):
+            PoolSet([_state("a", 4096), _state("b", 65_536)], [8192])
+
+    def test_static_pool_boundaries(self):
+        ps = PoolSet(
+            [_state("a", 4096), _state("b", 16_384), _state("c", 65_536)],
+            [4096, 16_384],
+        )
+        assert ps.static_pool(4096) == 0
+        assert ps.static_pool(4097) == 1
+        assert ps.static_pool(16_384) == 1
+        assert ps.static_pool(16_385) == 2
+        assert ps.static_pool(10**9) == 2
+
+    def test_first_feasible_escalates(self):
+        ps = PoolSet(
+            [_state("a", 4096), _state("b", 16_384), _state("c", 65_536)],
+            [4096, 16_384],
+        )
+        assert ps.first_feasible(0, 8000) == 1
+        assert ps.first_feasible(0, 20_000) == 2
+        assert ps.first_feasible(0, 10**9) == 2  # last pool catches all
+
+    def test_spill_order_prefers_near_then_larger(self):
+        states = [_state(f"p{k}", 2**12 << k) for k in range(4)]
+        ps = PoolSet(states, [2**12, 2**13, 2**14])
+        assert ps.spill_order(1) == [2, 0, 3]
+        assert ps.spill_order(0) == [1, 2, 3]
+        assert ps.spill_order(3) == [2, 1, 0]
+
+    def test_set_threshold_reverts_on_invalid(self):
+        ps = PoolSet(
+            [_state("a", 4096), _state("b", 16_384), _state("c", 65_536)],
+            [4096, 16_384],
+        )
+        with pytest.raises(ValueError):
+            ps.set_threshold(0, 20_000)  # would cross B_2
+        assert ps.thresholds.tolist() == [4096, 16_384]
+
+
+class TestNPoolDispatch:
+    def test_middle_pool_spills_to_larger_neighbour(self):
+        r = make_three_pool_router()
+        r.pools.states[1].queue_depth = 10_000  # p16k overloaded
+        d = r.route(Request(0, byte_len=4, max_output_tokens=8000, category=0))
+        assert d.pool == "p64k" and d.spilled
+
+    def test_smallest_pool_spills_up(self):
+        r = make_three_pool_router()
+        r.pools.states[0].queue_depth = 10_000  # p4k overloaded
+        d = r.route(Request(0, byte_len=4, max_output_tokens=100, category=0))
+        assert d.pool == "p16k" and d.spilled
+
+    def test_spill_skips_infeasible_smaller_pool(self):
+        """A budget above p4k's window can only spill upward."""
+        r = make_three_pool_router()
+        r.pools.states[1].queue_depth = 10_000
+        r.pools.states[2].queue_depth = 10_000  # p16k AND p64k overloaded
+        d = r.route(Request(0, byte_len=4, max_output_tokens=8000, category=0))
+        assert d.pool == "p16k" and not d.spilled  # nowhere feasible to go
+
+    def test_no_spill_when_disabled(self):
+        r = make_three_pool_router(spillover=False)
+        r.pools.states[1].queue_depth = 10_000
+        d = r.route(Request(0, byte_len=4, max_output_tokens=8000, category=0))
+        assert d.pool == "p16k" and not d.spilled
+
+    def test_route_decided_matches_route_counters(self):
+        r = make_three_pool_router()
+        reqs = [
+            Request(i, byte_len=4, max_output_tokens=m, category=0)
+            for i, m in enumerate((100, 5000, 20_000, 100, 8000))
+        ]
+        for req in reqs:
+            r.route(req)
+        r2 = make_three_pool_router()
+        ids, budgets = r2.route_batch(
+            [q.byte_len for q in reqs],
+            [q.max_output_tokens for q in reqs],
+            [q.category for q in reqs],
+        )
+        for pid, b in zip(ids, budgets):
+            r2.route_decided(int(pid), int(b))
+        assert r.routed == r2.routed
+
+    def test_stats_shape_for_three_pools(self):
+        r = make_three_pool_router()
+        r.route(Request(0, byte_len=4, max_output_tokens=100, category=0))
+        s = r.stats()
+        assert set(s["routed"]) == {"p4k", "p16k", "p64k"}
+        assert "short_fraction" not in s  # two-pool compat keys only at P=2
+        assert sum(s["fractions"].values()) == pytest.approx(1.0)
 
 
 class TestAdaptiveThreshold:

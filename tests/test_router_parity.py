@@ -1,0 +1,225 @@
+"""N-pool routing parity: scalar route() ≡ batched route_batch().
+
+The static decision of Algorithm 1 has two implementations — the host-side
+threshold search in :meth:`TokenBudgetRouter.route` and the vectorized
+``searchsorted`` kernel behind :meth:`TokenBudgetRouter.route_batch`. This
+suite pins them together for P ∈ {2, 3, 4} pools across every traffic
+category and the exact threshold boundaries (``B_k``, ``B_k ± 1``, and
+budgets beyond the largest ``C_max``), plus the shape-padding behaviour of
+ragged final epochs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EmaCalibrator,
+    PoolConfig,
+    PoolSet,
+    PoolState,
+    Request,
+    TokenBudgetRouter,
+    n_seq_for_cmax,
+)
+
+#: Budget-ordered topologies: (c_maxs, thresholds B_1 < … < B_{P-1}).
+TOPOLOGIES = {
+    2: ((8192, 65_536), (8192,)),
+    3: ((4096, 16_384, 65_536), (4096, 16_384)),
+    4: ((2048, 8192, 16_384, 65_536), (2048, 8192, 16_384)),
+}
+
+NUM_CATEGORIES = 4
+
+
+def make_pool_set(n_pools: int) -> PoolSet:
+    c_maxs, thresholds = TOPOLOGIES[n_pools]
+    states = [
+        PoolState(
+            config=PoolConfig(
+                f"pool{k}", c, n_seq_for_cmax(c, max_slots=64)
+            )
+        )
+        for k, c in enumerate(c_maxs)
+    ]
+    return PoolSet(states, thresholds)
+
+
+def make_router(n_pools: int, calibrator=None) -> TokenBudgetRouter:
+    return TokenBudgetRouter(
+        pools=make_pool_set(n_pools), calibrator=calibrator, spillover=False
+    )
+
+
+def boundary_requests(router: TokenBudgetRouter) -> list[Request]:
+    """Requests whose *estimated* budgets land exactly on every boundary.
+
+    Inverts Eq. 3 through the output-cap term: with ``byte_len=1`` the
+    input estimate is ``ceil(1/ĉ) = 1`` token for any sane ratio, so
+    ``max_output_tokens = target - 1`` pins the estimated total to
+    ``target`` regardless of calibration state.
+    """
+    largest_cmax = router.pools.configs[-1].c_max
+    targets = sorted(
+        {
+            t
+            for b in router.pools.thresholds
+            for t in (int(b) - 1, int(b), int(b) + 1)
+        }
+        | {2, largest_cmax, largest_cmax + 1, 4 * largest_cmax}
+    )
+    return [
+        Request(
+            request_id=i,
+            byte_len=1,
+            max_output_tokens=t - 1,
+            category=cat,
+        )
+        for i, (t, cat) in enumerate(
+            (t, cat) for t in targets for cat in range(NUM_CATEGORIES)
+        )
+    ]
+
+
+def warmed_calibrator(seed: int = 0) -> EmaCalibrator:
+    """A calibrator with distinct per-category ratios and spreads."""
+    calib = EmaCalibrator()
+    rng = np.random.default_rng(seed)
+    true_ratio = {0: 4.4, 1: 3.1, 2: 2.0, 3: 3.6}
+    for _ in range(80):
+        cat = int(rng.integers(0, NUM_CATEGORIES))
+        tokens = int(rng.integers(100, 4000))
+        noisy = tokens * (true_ratio[cat] + rng.normal(0, 0.3))
+        calib.observe(max(1, int(noisy)), tokens, cat)
+    return calib
+
+
+@pytest.mark.parametrize("n_pools", [2, 3, 4])
+class TestStaticParity:
+    def assert_parity(
+        self, router: TokenBudgetRouter, requests, *, exact: bool = True
+    ) -> None:
+        """Scalar and batched static decisions must agree.
+
+        ``exact=False`` admits the one known divergence: the host path
+        computes ``ceil(|r|/ĉ)`` in float64, the JAX kernel in float32, so
+        budgets may differ by 1 ulp-of-ceil on ~100k-token estimates —
+        decisions then may only differ when that ±1 straddles a threshold.
+        """
+        pool_ids, budgets = router.route_batch(
+            [r.byte_len for r in requests],
+            [r.max_output_tokens for r in requests],
+            [r.category for r in requests],
+        )
+        thresholds = router.pools.thresholds
+        for i, r in enumerate(requests):
+            d = router.route(r)
+            batch_idx, batch_budget = int(pool_ids[i]), int(budgets[i])
+            assert d.pool == router.pools.names[d.pool_index]
+            if exact:
+                assert d.estimated_total == batch_budget, f"req {i}"
+            else:
+                assert abs(d.estimated_total - batch_budget) <= 1, f"req {i}"
+            lo = min(d.estimated_total, batch_budget)
+            hi = max(d.estimated_total, batch_budget)
+            straddles = bool(np.any((thresholds >= lo) & (thresholds < hi)))
+            if not straddles:
+                assert d.pool_index == batch_idx, (
+                    f"req {i}: scalar → {d.pool_index}, batch → {batch_idx} "
+                    f"(budget {d.estimated_total} vs {batch_budget})"
+                )
+
+    def test_boundary_budgets_cold(self, n_pools):
+        """Exactly B_k / B_k ± 1 / beyond-largest-C_max, cold calibrator."""
+        router = make_router(n_pools)
+        self.assert_parity(router, boundary_requests(router))
+
+    def test_boundary_budgets_warmed(self, n_pools):
+        """Same boundaries with converged per-category calibration."""
+        router = make_router(n_pools, calibrator=warmed_calibrator())
+        self.assert_parity(router, boundary_requests(router))
+
+    def test_random_requests_warmed(self, n_pools):
+        """Randomized byte/cap/category sweep, per-category ratios live."""
+        router = make_router(n_pools, calibrator=warmed_calibrator(7))
+        rng = np.random.default_rng(n_pools)
+        requests = [
+            Request(
+                request_id=i,
+                byte_len=int(rng.integers(1, 400_000)),
+                max_output_tokens=int(rng.integers(1, 40_000)),
+                category=int(rng.integers(0, NUM_CATEGORIES)),
+            )
+            for i in range(300)
+        ]
+        self.assert_parity(router, requests, exact=False)
+
+    def test_beyond_largest_cmax_goes_last_pool(self, n_pools):
+        """The hard-constraint tail: an infeasible-everywhere budget still
+        routes (to the largest pool) identically in both paths."""
+        router = make_router(n_pools)
+        big = 4 * router.pools.configs[-1].c_max
+        d = router.route(Request(0, byte_len=1, max_output_tokens=big, category=0))
+        pool_ids, _ = router.route_batch([1], [big], [0])
+        assert d.pool_index == int(pool_ids[0]) == n_pools - 1
+
+
+class TestRaggedEpochPadding:
+    """route_batch pads inputs to a power of two for JIT shape reuse; the
+    pad rows must never escape into decisions, counters, or feedback."""
+
+    def test_output_sliced_to_input_length(self):
+        router = make_router(3)
+        for n in (1, 5, 37, 100, 1000):
+            pool_ids, budgets = router.route_batch(
+                [100] * n, [64] * n, [0] * n
+            )
+            assert len(pool_ids) == len(budgets) == n
+
+    def test_ragged_tail_matches_full_batch_prefix(self):
+        """Same calibrator state → a ragged final epoch routes exactly like
+        the corresponding prefix of a larger (differently-padded) batch."""
+        router = make_router(3, calibrator=warmed_calibrator(3))
+        rng = np.random.default_rng(11)
+        byte_lens = rng.integers(1, 200_000, size=256)
+        caps = rng.integers(1, 30_000, size=256)
+        cats = rng.integers(0, NUM_CATEGORIES, size=256)
+        full_ids, full_budgets = router.route_batch(byte_lens, caps, cats)
+        for n in (37, 100, 255):  # three different pad widths
+            ids, budgets = router.route_batch(
+                byte_lens[:n], caps[:n], cats[:n]
+            )
+            np.testing.assert_array_equal(ids, full_ids[:n])
+            np.testing.assert_array_equal(budgets, full_budgets[:n])
+
+    def test_counters_unaffected_by_padding(self):
+        """Dispatching every batched decision counts exactly n requests —
+        pad rows never reach the routed counters."""
+        router = make_router(3)
+        n = 37  # pads to 64
+        pool_ids, budgets = router.route_batch([100] * n, [64] * n, [0] * n)
+        for pid, budget in zip(pool_ids, budgets):
+            router.route_decided(int(pid), int(budget))
+        assert sum(router.routed.values()) == n
+
+    def test_fleet_ragged_final_epoch_counts_exact(self):
+        """End-to-end regression: a vectorized fleet whose trace does not
+        fill its final routing epoch routes exactly len(trace) requests."""
+        from repro.sim.fleet import FleetSim
+        from repro.sim.timing import TimingModel
+        from repro.traces import TraceSpec, generate_trace_columns
+
+        cols = generate_trace_columns(
+            TraceSpec(trace="azure", num_requests=100, rate=200.0, seed=5)
+        )  # first epoch 64, final epoch a ragged 36 → padded to 64
+        cfgs = {
+            "short": (PoolConfig("short", 8192, 32), 2),
+            "long": (PoolConfig("long", 65_536, 8), 2),
+        }
+        timing = TimingModel("fast", w_base=1e-3, h_per_seq=1e-4, prefill_chunk=512)
+        sim = FleetSim(cfgs, timing, backend="vectorized")
+        res = sim.run(cols)
+        assert sum(sim.router.routed.values()) == len(cols)
+        assert res.summary.num_requests == len(cols) - int(len(cols) * 0.2)
+        # EMA feedback saw at most one observation per completed request.
+        assert sum(sim.router.calibrator.count) <= len(cols)

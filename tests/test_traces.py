@@ -5,7 +5,15 @@ import numpy as np
 import pytest
 from hypothesis import given, settings
 
-from repro.traces import AZURE, LMSYS, TraceSpec, generate_trace, short_fraction
+from repro.traces import (
+    AZURE,
+    LMSYS,
+    TraceColumns,
+    TraceSpec,
+    generate_trace,
+    generate_trace_columns,
+    short_fraction,
+)
 
 settings.register_profile("fast", max_examples=40, deadline=None)
 settings.load_profile("fast")
@@ -83,6 +91,14 @@ class TestGenerator:
         reqs = generate_trace(TraceSpec(trace="azure", num_requests=20_000, seed=3))
         assert short_fraction(reqs, 8192) == pytest.approx(0.917, abs=0.01)
 
+    def test_short_fraction_accepts_columns(self):
+        cols = generate_trace_columns(
+            TraceSpec(trace="azure", num_requests=5000, seed=3)
+        )
+        assert short_fraction(cols, 8192) == pytest.approx(
+            short_fraction(cols.to_requests(), 8192)
+        )
+
     def test_cap_styles(self):
         for style in ("exact", "padded", "bucket"):
             reqs = generate_trace(
@@ -94,3 +110,48 @@ class TestGenerator:
                 )
         exact = generate_trace(TraceSpec(num_requests=200, seed=1))
         assert all(r.max_output_tokens == r.true_output_tokens for r in exact)
+
+
+class TestTraceColumns:
+    @pytest.mark.parametrize("trace", ["azure", "lmsys"])
+    def test_bit_identical_to_object_path(self, trace):
+        """generate_trace_columns(spec) must equal columnarizing
+        generate_trace(spec) exactly — same seed, same RNG draw order."""
+        spec = TraceSpec(trace=trace, num_requests=3000, rate=300.0, seed=17)
+        native = generate_trace_columns(spec)
+        via_objects = TraceColumns.from_requests(generate_trace(spec))
+        for field in (
+            "request_id",
+            "byte_len",
+            "max_output_tokens",
+            "category",
+            "arrival_time",
+            "true_input_tokens",
+            "true_output_tokens",
+        ):
+            np.testing.assert_array_equal(
+                getattr(native, field), getattr(via_objects, field), err_msg=field
+            )
+
+    def test_roundtrip_through_requests(self):
+        cols = generate_trace_columns(TraceSpec(num_requests=500, seed=9))
+        back = TraceColumns.from_requests(cols.to_requests())
+        np.testing.assert_array_equal(cols.byte_len, back.byte_len)
+        np.testing.assert_array_equal(cols.arrival_time, back.arrival_time)
+        assert len(cols) == 500
+        assert len(cols.head(10)) == 10
+
+    def test_sorted_by_arrival(self):
+        cols = generate_trace_columns(TraceSpec(num_requests=100, seed=2))
+        assert cols.sorted_by_arrival() is cols  # generator output is sorted
+        import dataclasses
+
+        shuffled = TraceColumns(
+            **{
+                f.name: getattr(cols, f.name)[::-1]
+                for f in dataclasses.fields(cols)
+            }
+        )
+        resorted = shuffled.sorted_by_arrival()
+        np.testing.assert_array_equal(resorted.arrival_time, cols.arrival_time)
+        np.testing.assert_array_equal(resorted.request_id, cols.request_id)

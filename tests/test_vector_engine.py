@@ -14,10 +14,10 @@ import pytest
 
 from repro.core.pools import PoolConfig, n_seq_for_cmax
 from repro.core.router import Request
-from repro.sim import A100_LLAMA3_70B, plan_fleet
+from repro.sim import A100_LLAMA3_70B, plan_fleet, profile_pool
 from repro.sim.fleet import FleetSim, run_fleet
 from repro.sim.timing import TimingModel
-from repro.traces import TraceSpec, generate_trace
+from repro.traces import TraceSpec, generate_trace, generate_trace_columns
 
 #: Dyadic constants: W, H, and every accumulated event time are exact
 #: binary floats, so `now + k*t_iter` (vector) == repeated addition (scalar).
@@ -138,26 +138,56 @@ class TestExactEquivalence:
         assert record_tuples(ref, ref_sim) == record_tuples(vec, vec_sim)
 
 
-class TestRoutedTolerance:
-    """Two-pool fleets batch routing per epoch (calibration lags ≤ one
-    epoch), so aggregate metrics agree within tolerance, not bit-for-bit."""
+def three_pool_topology(trace, rate):
+    """4K/16K/64K pools sized analytically for this trace (oracle split)."""
+    cfgs = (
+        PoolConfig("p4k", 4096, n_seq_for_cmax(4096), headroom=1.05),
+        PoolConfig("p16k", 16_384, n_seq_for_cmax(16_384), headroom=1.05),
+        PoolConfig("p64k", 65_536, 16, headroom=1.02),
+    )
+    thresholds = [4096, 16_384]
+    group = np.searchsorted(thresholds, [r.true_total for r in trace])
+    pools = {}
+    for k, cfg in enumerate(cfgs):
+        members = [r for r, g in zip(trace, group) if g == k]
+        prof = profile_pool(cfg.name, trace, members, cfg, A100_LLAMA3_70B, rate)
+        pools[cfg.name] = (cfg, max(1, prof.instances))
+    return pools, thresholds
 
-    @pytest.fixture(scope="class")
-    def results(self):
+
+class TestRoutedTolerance:
+    """Routed fleets batch routing per epoch (calibration lags ≤ one
+    epoch), so aggregate metrics agree within tolerance, not bit-for-bit —
+    checked for both the classic short/long pair and the 4K/16K/64K
+    three-pool topology."""
+
+    @pytest.fixture(scope="class", params=["two_pool", "three_pool"])
+    def results(self, request):
         n, rate = 4000, 400.0
         trace = generate_trace(
             TraceSpec(trace="azure", num_requests=n, rate=rate, seed=42)
         )
-        plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
-        pools = {
-            "short": (
-                PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
-                plan.short.instances,
-            ),
-            "long": (PoolConfig("long", 65_536, 16, headroom=1.02), plan.long.instances),
-        }
-        ref = run_fleet(trace, pools, A100_LLAMA3_70B, backend="reference")
-        vec = run_fleet(trace, pools, A100_LLAMA3_70B, backend="vectorized")
+        if request.param == "two_pool":
+            plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
+            pools = {
+                "short": (
+                    PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
+                    plan.short.instances,
+                ),
+                "long": (
+                    PoolConfig("long", 65_536, 16, headroom=1.02),
+                    plan.long.instances,
+                ),
+            }
+            thresholds = None
+        else:
+            pools, thresholds = three_pool_topology(trace, rate)
+        ref = run_fleet(
+            trace, pools, A100_LLAMA3_70B, backend="reference", thresholds=thresholds
+        )
+        vec = run_fleet(
+            trace, pools, A100_LLAMA3_70B, backend="vectorized", thresholds=thresholds
+        )
         return ref, vec
 
     def test_completion_totals_close(self, results):
@@ -178,13 +208,49 @@ class TestRoutedTolerance:
 
     def test_routing_fractions_close(self, results):
         ref, vec = results
-        assert vec.router_stats["short_fraction"] == pytest.approx(
-            ref.router_stats["short_fraction"], abs=0.02
-        )
+        for name, frac in ref.router_stats["fractions"].items():
+            assert vec.router_stats["fractions"][name] == pytest.approx(
+                frac, abs=0.02
+            ), name
 
     def test_calibration_converges_both(self, results):
         for res in results:
             assert all(c > 0 for c in res.router_stats["calibration"]["count"])
+
+
+class TestColumnarInput:
+    """TraceColumns is the vectorized backend's native input; feeding the
+    columns directly must be indistinguishable from feeding the
+    materialized Request objects — on both backends."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cols = generate_trace_columns(
+            TraceSpec(trace="azure", num_requests=1200, rate=120.0, seed=21)
+        )
+        plan = plan_fleet("azure", cols.to_requests(), A100_LLAMA3_70B, 120.0)
+        pools = {
+            "short": (
+                PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
+                plan.short.instances,
+            ),
+            "long": (
+                PoolConfig("long", 65_536, 16, headroom=1.02),
+                plan.long.instances,
+            ),
+        }
+        return cols, pools
+
+    @pytest.mark.parametrize("backend", ["vectorized", "reference"])
+    def test_columns_equal_objects(self, setup, backend):
+        cols, pools = setup
+        res_c = run_fleet(cols, pools, A100_LLAMA3_70B, backend=backend)
+        res_o = run_fleet(
+            cols.to_requests(), pools, A100_LLAMA3_70B, backend=backend
+        )
+        for f in SUMMARY_FIELDS:
+            assert getattr(res_c.summary, f) == getattr(res_o.summary, f), f
+        assert res_c.router_stats["routed"] == res_o.router_stats["routed"]
 
 
 class TestCanonicalRecords:
