@@ -1,98 +1,204 @@
-"""Beyond-paper: error-driven threshold discovery (paper §7, implemented).
+"""Beyond-paper: closed-loop adaptive control under nonstationary traffic.
 
-Scenario: the short pool is deliberately undersized to 60% of its designed
-fleet (a realistic capacity incident). With a *static* B_short the short
-pool's queue grows without bound while long-pool slots idle; the AIMD
-controller (repro/core/adaptive.py) detects the pressure and shifts the
-boundary down, off-loading borderline traffic to the long pool's slack.
+The paper's §7 proposes error-driven threshold discovery and §8 prescribes
+monitoring preemption pressure. This benchmark drives the first-class
+:class:`~repro.core.adaptive.AdaptiveController` — plugged into
+``FleetSim(controller=..., control_window=...)``, no monkeypatching — over
+three nonstationary scenarios, each static-vs-adaptive, all through the
+vectorized backend:
 
-Reported: P99 TTFT static vs adaptive, plus the controller's trajectory.
+* ``incident`` — the short pool is undersized to 60% of its designed fleet
+  (a realistic capacity incident) under stationary arrivals. With a static
+  B_short the short queue grows without bound while long-pool slots idle;
+  the controller shifts the boundary down and off-loads borderline traffic
+  into the long pool's slack.
+* ``surge`` — a burst window at 3× the provisioned arrival rate
+  (``TraceSpec(rate_profile="burst")``). The controller tightens during the
+  burst and relaxes back once pressure clears.
+* ``drift`` — content drift: the category mix slides from Azure's
+  prose/code-heavy mix toward LMSYS's CJK-heavy mix while the true
+  bytes/token ratio shrinks 50% across the trace
+  (``mix_drift`` + ``bytes_drift``), on a short pool provisioned at 70%
+  for the pre-drift content. The lagging EMA under-estimates token
+  budgets, mis-routing heavy requests into the short pool; the controller
+  reacts to the resulting preemption/truncation pressure.
+
+Reported per scenario: P99 TTFT and the composite error rate
+(preemptions+rejections+truncations — the controller's §8 contract) for
+static vs adaptive, plus the controller's boundary trajectory.
 """
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import time
+from typing import Optional
 
 from benchmarks.common import emit
-from repro.core.adaptive import AdaptiveThreshold
+from repro.core.adaptive import AdaptiveController
 from repro.core.pools import PoolConfig, n_seq_for_cmax
 from repro.sim import A100_LLAMA3_70B, FleetSim, plan_fleet
-from repro.traces import TraceSpec, generate_trace
+from repro.traces import TraceSpec, generate_trace_columns
 
 
-def _run(trace, pools, adaptive: bool):
-    sim = FleetSim(pools, A100_LLAMA3_70B, b_short=8192)
-    controller = AdaptiveThreshold(b_short=8192, b_min=512) if adaptive else None
-    window, errors_at_window = 200, [0]
-
-    if controller is not None:
-        orig_route = sim._route
-
-        def route_with_control(request):
-            n = sim.router.routed["short"] + sim.router.routed["long"]
-            if n and n % window == 0:
-                short = sim.pools["short"]
-                long_ = sim.pools["long"]
-                short.refresh_state()
-                long_.refresh_state()
-                errs = sum(i.preemption_count + i.rejection_count
-                           for i in short.instances)
-                new_b = controller.update(
-                    window_requests=window,
-                    short_errors=errs - errors_at_window[0],
-                    short_queue=short.state.queue_depth,
-                    short_instances=short.state.num_instances,
-                    long_queue=long_.state.queue_depth,
-                    long_instances=long_.state.num_instances,
-                )
-                errors_at_window[0] = errs
-                sim.router.b_short = new_b
-            return orig_route(request)
-
-        sim._route = route_with_control
-    return sim.run(trace), controller
+#: Valid scenario names, in run order.
+SCENARIO_NAMES = ("incident", "surge", "drift")
 
 
-def run(scale: float = 0.2, seed: int = 42) -> dict:
-    rate = 1000.0 * scale
-    trace = generate_trace(
-        TraceSpec(trace="azure", num_requests=int(10_000 * scale), rate=rate,
-                  seed=seed)
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One nonstationary traffic scenario for the static-vs-adaptive A/B."""
+
+    name: str
+    spec: TraceSpec
+    short_scale: float = 1.0  # capacity incident: fraction of designed fleet
+
+
+def scenarios(num_requests: int, rate: float, seed: int) -> list[Scenario]:
+    duration = num_requests / rate  # nominal stationary trace length, s
+    base = TraceSpec(
+        trace="azure", num_requests=num_requests, rate=rate, seed=seed
     )
-    plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
+    return [
+        Scenario("incident", base, short_scale=0.6),
+        Scenario(
+            "surge",
+            dataclasses.replace(
+                base,
+                rate_profile="burst",
+                rate_amplitude=2.0,
+                rate_period=0.2 * duration,
+            ),
+        ),
+        # Content drift on a fleet provisioned for the pre-drift content:
+        # the short pool runs at 70% of its designed size, so the lagging
+        # EMA's mis-routes tip it into visible pressure.
+        Scenario(
+            "drift",
+            dataclasses.replace(base, mix_drift=1.0, bytes_drift=-0.5),
+            short_scale=0.7,
+        ),
+    ]
+
+
+def build_pools(
+    trace_cols, rate: float, short_scale: float
+) -> dict[str, tuple[PoolConfig, int]]:
+    """The paper's short/long pair, analytically sized for the base rate."""
+    plan = plan_fleet("azure", trace_cols.to_requests(), A100_LLAMA3_70B, rate)
     short_cfg = PoolConfig(
         "short", 8192, n_seq_for_cmax(8192), batch_token_budget=16_384,
         headroom=1.05, queue_limit=64,
     )
     long_cfg = PoolConfig("long", 65_536, 16, headroom=1.02, queue_limit=64)
-    # capacity incident: short pool at 60% of designed size
-    pools = {
-        "short": (short_cfg, max(1, int(plan.short.instances * 0.6))),
+    return {
+        "short": (short_cfg, max(1, int(plan.short.instances * short_scale))),
         "long": (long_cfg, plan.long.instances),
     }
 
+
+def run_scenario(
+    sc: Scenario,
+    *,
+    backend: str = "vectorized",
+    control_window: int = 200,
+) -> dict:
+    cols = generate_trace_columns(sc.spec)
+    pools = build_pools(cols, sc.spec.rate, sc.short_scale)
+
     out = {}
-    for label, adaptive in (("static", False), ("adaptive", True)):
+    for label in ("static", "adaptive"):
+        controller: Optional[AdaptiveController] = (
+            AdaptiveController(b_min=512) if label == "adaptive" else None
+        )
+        sim = FleetSim(
+            dict(pools),
+            A100_LLAMA3_70B,
+            b_short=8192,
+            backend=backend,
+            controller=controller,
+            control_window=control_window,
+        )
         t0 = time.perf_counter()
-        res, controller = _run(trace, dict(pools), adaptive)
+        res = sim.run(cols)
         wall = (time.perf_counter() - t0) * 1e6
         s = res.summary
-        short = res.per_pool["short"]
         extra = ""
         if controller is not None:
             extra = (
-                f";final_b={controller.b_short}"
                 f";moves={len(controller.history)}"
+                f";final_b={controller.thresholds[0]}"
             )
         emit(
-            f"beyond/adaptive/{label}",
+            f"beyond/adaptive/{sc.name}/{label}",
             wall,
-            f"ttft_p99={s.ttft_p99:.2f};short_ttft_p99={short.ttft_p99:.2f};"
+            f"ttft_p99={s.ttft_p99:.2f};err_rate={s.error_rate:.4f};"
             f"spills={s.spills};success={s.success_rate:.4f}{extra}",
         )
+        if controller is not None and controller.history:
+            traj = "|".join(
+                f"{m.t}:{m.value}" for m in controller.history[:24]
+            )
+            emit(f"beyond/adaptive/{sc.name}/trajectory", 0.0, traj)
         out[label] = res
+        out[f"{label}_controller"] = controller
     return out
 
 
+def run_scenarios(
+    num_requests: int,
+    rate: float,
+    seed: int,
+    *,
+    backend: str = "vectorized",
+    only: Optional[list[str]] = None,
+) -> dict:
+    """Run the selected scenarios; unknown names are an error, never a
+    silent no-op (the CI smoke depends on actually exercising the loop)."""
+    names = list(only) if only else list(SCENARIO_NAMES)
+    unknown = sorted(set(names) - set(SCENARIO_NAMES))
+    if unknown:
+        raise ValueError(
+            f"unknown scenarios {unknown}; expected a subset of {SCENARIO_NAMES}"
+        )
+    return {
+        sc.name: run_scenario(sc, backend=backend)
+        for sc in scenarios(num_requests, rate, seed)
+        if sc.name in names
+    }
+
+
+def run(
+    scale: float = 0.5,
+    seed: int = 42,
+    *,
+    backend: str = "vectorized",
+    only: Optional[list[str]] = None,
+) -> dict:
+    return run_scenarios(
+        int(10_000 * scale), 1000.0 * scale, seed, backend=backend, only=only
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=5000)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrival rate (default: requests/10 → 10 s trace)")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--backend", default="vectorized",
+                    choices=("reference", "vectorized"))
+    ap.add_argument("--scenarios", nargs="+", default=None,
+                    choices=SCENARIO_NAMES,
+                    help="subset of scenarios to run (default: all)")
+    args = ap.parse_args()
+    rate = args.rate if args.rate is not None else args.requests / 10.0
+    run_scenarios(
+        args.requests, rate, args.seed,
+        backend=args.backend, only=args.scenarios,
+    )
+
+
 if __name__ == "__main__":
-    run()
+    main()

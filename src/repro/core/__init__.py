@@ -4,11 +4,17 @@ Public API:
 
 * ``EmaCalibrator`` / ``CalibState`` — self-calibrating bytes-per-token EMA.
 * ``TokenBudgetRouter`` / ``Request`` — Algorithm 1 dispatch (N-pool).
+* ``AdaptiveController`` — N-boundary AIMD threshold control (§7/§8).
 * ``PoolConfig`` / ``PoolSet`` / ``short_pool`` / ``long_pool`` — pool
   definitions and the budget-ordered pool family.
 * ``closed_form_savings`` / ``corrected_savings`` — Eq. 7 / Eq. 8.
 """
 
+from repro.core.adaptive import (
+    AdaptiveController,
+    AdaptiveThreshold,
+    BoundaryMove,
+)
 from repro.core.calibration import (
     CalibState,
     EmaCalibrator,
@@ -63,6 +69,9 @@ from repro.core.router import (
 )
 
 __all__ = [
+    "AdaptiveController",
+    "AdaptiveThreshold",
+    "BoundaryMove",
     "CalibState",
     "EmaCalibrator",
     "init_state",

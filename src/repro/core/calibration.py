@@ -185,11 +185,14 @@ def jax_update(
         prompt_tokens.astype(jnp.float32), 1.0
     )
     ratio_k = state.ratio[category]
-    # first observation replaces the cold-start prior (see EmaCalibrator)
+    # first observation replaces the cold-start prior (see EmaCalibrator);
+    # the SAME b drives the sigma EMA so the scalar and JAX Eq. 4 paths
+    # stay in lockstep from cold start (a beta-weighted sigma here would
+    # diverge whenever the prior sigma is nonzero at count=0).
     b = jnp.where(state.count[category] > 0, beta, 0.0)
     new_ratio_k = b * ratio_k + (1.0 - b) * c_obs
     dev = jnp.abs(c_obs - new_ratio_k)
-    new_sigma_k = beta * state.sigma[category] + (1.0 - beta) * dev
+    new_sigma_k = b * state.sigma[category] + (1.0 - b) * dev
     valid = prompt_tokens > 0
     return CalibState(
         ratio=state.ratio.at[category].set(

@@ -122,7 +122,7 @@ class PoolSet:
     Pools are sorted by ``C_max`` at construction (stable, so equal-capacity
     pools keep caller order); ``thresholds`` stays a mutable array because
     the adaptive controller moves boundaries at runtime
-    (:class:`repro.core.adaptive.AdaptiveThreshold`).
+    (:class:`repro.core.adaptive.AdaptiveController`).
     """
 
     def __init__(
@@ -187,6 +187,25 @@ class PoolSet:
             self._validate_thresholds()
         except ValueError:
             self._thresholds[k] = old
+            raise
+
+    def set_thresholds(self, values: Sequence[int]) -> None:
+        """Replace the whole boundary vector atomically (adaptive control).
+
+        Mutates the threshold list *in place* so live aliases (the router's
+        hot-path view) observe the move; restores the previous vector when
+        validation fails, so observers never see an invalid ordering.
+        """
+        if len(values) != len(self._thresholds):
+            raise ValueError(
+                f"expected {len(self._thresholds)} thresholds, got {len(values)}"
+            )
+        old = list(self._thresholds)
+        self._thresholds[:] = [int(v) for v in values]
+        try:
+            self._validate_thresholds()
+        except ValueError:
+            self._thresholds[:] = old
             raise
 
     def static_pool(self, budget: int) -> int:

@@ -244,6 +244,9 @@ class TokenBudgetRouter:
             "fractions": {n: c / total for n, c in self.routed.items()},
             "spill_count": self.spill_count,
             "calibration": self.calibrator.snapshot(),
+            # Live boundary vector — under adaptive control this is the
+            # controller's final operating point (§8 observability).
+            "thresholds": [int(b) for b in self._th],
         }
         if len(self.pools) == 2:
             first, last = self.pools.names[0], self.pools.names[-1]

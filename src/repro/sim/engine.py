@@ -102,6 +102,7 @@ class InstanceSim:
         self.records: list[RequestRecord] = []
         self.preemption_count = 0
         self.rejection_count = 0
+        self.truncation_count = 0
         self.busy_time = 0.0
         self._carried_preemptions: dict[int, int] = {}
 
@@ -258,6 +259,7 @@ class InstanceSim:
             if seq.context_len >= self.pool.c_max and seq.decode_remaining > 0:
                 seq.truncated = True
                 seq.decode_remaining = 0
+                self.truncation_count += 1
 
             if seq.decode_remaining == 0:
                 self.active.remove(seq)

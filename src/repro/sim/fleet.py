@@ -53,6 +53,7 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.adaptive import AdaptiveController
 from repro.core.calibration import EmaCalibrator
 from repro.core.pools import PoolConfig, PoolSet, PoolState
 from repro.core.router import Request, TokenBudgetRouter
@@ -115,6 +116,10 @@ class PoolSim:
     def rejections(self) -> int:
         return sum(i.rejection_count for i in self.instances)
 
+    @property
+    def truncations(self) -> int:
+        return sum(i.truncation_count for i in self.instances)
+
 
 @dataclasses.dataclass
 class FleetResult:
@@ -123,6 +128,9 @@ class FleetResult:
     router_stats: dict
     preemptions: int
     rejections: int
+    #: Mid-generation context-window truncations across the fleet — the
+    #: third component of the adaptive controller's error signal.
+    truncations: int = 0
     #: Canonical per-request outcomes — every submitted request appears
     #: exactly once (completed, truncated, or rejected). Populated by the
     #: reference backend; the vectorized backend keeps outcomes columnar
@@ -143,6 +151,16 @@ class FleetSim:
     they default to each non-last pool's ``C_max`` — except for the classic
     ``{"short", "long"}`` pair, where ``b_short`` keeps its original
     meaning as the single boundary.
+
+    Closed-loop adaptive control (paper §7/§8) is a first-class hook:
+    pass ``controller=AdaptiveController(...)`` and every
+    ``control_window`` dispatched requests the fleet reports windowed
+    per-pool error deltas (preemptions + rejections + truncations) plus
+    live queue depths, and the controller moves the PoolSet boundaries in
+    place — the router's hot path sees the new thresholds immediately.
+    Both backends fire the hook on the same request-count windows; the
+    vectorized backend caps its routing epoch at the control window so a
+    boundary move is never stale by more than one window.
     """
 
     def __init__(
@@ -157,6 +175,8 @@ class FleetSim:
         backend: str = "reference",
         epoch: int = 2048,
         coalesce_dt: Optional[float] = None,
+        controller: Optional[AdaptiveController] = None,
+        control_window: int = 512,
     ) -> None:
         if backend not in ("reference", "vectorized"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -195,6 +215,59 @@ class FleetSim:
                 calibrator=calibrator or EmaCalibrator(),
                 spillover=spillover,
             )
+        # -- closed-loop adaptive control (first-class hook) -----------------
+        self.controller = controller
+        self.control_window = int(control_window)
+        self._ctrl_pools: list = []
+        if controller is not None:
+            if self.router is None:
+                raise ValueError("adaptive control needs at least two pools")
+            if self.control_window <= 0:
+                raise ValueError("control_window must be positive")
+            controller.bind(self.router.pools)
+            # Pool sims in PoolSet budget order (the controller's frame),
+            # matched by the shared PoolState identity.
+            by_state = {id(p.state): p for p in self.pools.values()}
+            self._ctrl_pools = [
+                by_state[id(s)] for s in self.router.pools.states
+            ]
+            self._ctrl_prev_errors = [0] * len(self._ctrl_pools)
+            self._ctrl_seen = 0
+            self._ctrl_prev_seen = 0
+
+    # -- adaptive control ----------------------------------------------------
+    def _control_step(self) -> None:
+        """One monitoring window: report per-pool deltas, move boundaries.
+
+        Errors follow the controller contract — preemptions + rejections +
+        **truncations** accumulated since the previous window; queue depths
+        and instance counts are the live O(1) PoolState counters (no
+        instance sweep on the hot path). ``window_requests`` is the
+        *actual* dispatched-request delta since the previous step, so the
+        error rate stays correctly normalized even when the vectorized
+        backend's coalesced rounds overshoot the nominal window.
+        """
+        totals = [
+            p.preemptions + p.rejections + p.truncations
+            for p in self._ctrl_pools
+        ]
+        self.controller.update(
+            window_requests=self._ctrl_seen - self._ctrl_prev_seen,
+            errors=[t - s for t, s in zip(totals, self._ctrl_prev_errors)],
+            queues=[p.state.queue_depth for p in self._ctrl_pools],
+            instances=[p.state.num_instances for p in self._ctrl_pools],
+            t=self._ctrl_seen,
+        )
+        self._ctrl_prev_errors = totals
+        self._ctrl_prev_seen = self._ctrl_seen
+
+    def _ctrl_tick(self, n: int) -> None:
+        """Advance the dispatched-request counter by ``n``; fire one
+        control step once at least ``control_window`` requests have been
+        dispatched since the previous step."""
+        self._ctrl_seen += n
+        if self._ctrl_seen - self._ctrl_prev_seen >= self.control_window:
+            self._control_step()
 
     # -- routing (reference path) --------------------------------------------
     def _route(self, request: Request) -> PoolSim:
@@ -242,6 +315,8 @@ class FleetSim:
                 inst = pool.least_loaded()
                 if inst.submit(request, request.arrival_time):
                     wake(inst, request.arrival_time)
+                if self.controller is not None:
+                    self._ctrl_tick(1)
                 continue
 
             now, _, inst = heapq.heappop(heap)
@@ -273,6 +348,7 @@ class FleetSim:
             router_stats=self.router.stats() if self.router else {},
             preemptions=sum(p.preemptions for p in self.pools.values()),
             rejections=sum(p.rejections for p in self.pools.values()),
+            truncations=sum(p.truncations for p in self.pools.values()),
             records=all_records,
         )
 
@@ -345,11 +421,19 @@ class FleetSim:
         # the EMA has converged — otherwise early long prompts get
         # underestimated, mis-routed to a too-small pool, and hard-rejected
         # where the per-request reference path would have served them.
-        chunk_size = min(64, self.epoch)
+        # Under adaptive control the epoch is additionally capped at the
+        # control window, so a boundary move reaches route_batch within one
+        # window of the request count that triggered it.
+        epoch_cap = (
+            self.epoch
+            if self.controller is None
+            else max(1, min(self.epoch, self.control_window))
+        )
+        chunk_size = min(64, epoch_cap)
         while pos < n:
             start = pos
             pos = min(n, pos + chunk_size)
-            chunk_size = min(self.epoch, chunk_size * 2)
+            chunk_size = min(epoch_cap, chunk_size * 2)
             if router is not None:
                 # Epoch-batched Algorithm 1: one jitted routing call per
                 # chunk, using the calibration state as of the epoch start
@@ -382,6 +466,12 @@ class FleetSim:
                         float(arrival[jj]),
                     ):
                         wake_min = min(wake_min, pool.wake_min)
+                # Control windows align to coalesced rounds: the windowed
+                # per-pool error/queue deltas are read after each round's
+                # arrivals land, mirroring the reference backend's cadence
+                # within one coalescing horizon.
+                if self.controller is not None:
+                    self._ctrl_tick(jend - j)
                 j = jend
             # Epoch boundary: sync completed-request feedback into the EMA.
             feedback()
@@ -401,6 +491,7 @@ class FleetSim:
             router_stats=router.stats() if router else {},
             preemptions=sum(p.preemptions for p in pools),
             rejections=sum(p.rejections for p in pools),
+            truncations=sum(p.truncations for p in pools),
         )
 
 
@@ -415,6 +506,8 @@ def run_fleet(
     spillover: bool = True,
     backend: str = "reference",
     coalesce_dt: Optional[float] = None,
+    controller: Optional[AdaptiveController] = None,
+    control_window: int = 512,
 ) -> FleetResult:
     """Convenience wrapper: build a FleetSim and run the trace."""
     sim = FleetSim(
@@ -426,5 +519,7 @@ def run_fleet(
         spillover=spillover,
         backend=backend,
         coalesce_dt=coalesce_dt,
+        controller=controller,
+        control_window=control_window,
     )
     return sim.run(trace)

@@ -76,6 +76,16 @@ class SimSummary:
             return 1.0
         return self.completed / self.num_requests
 
+    @property
+    def error_rate(self) -> float:
+        """(preemptions + rejections + truncations) / requests — the same
+        composite the adaptive controller monitors (§8), post-warmup."""
+        if self.num_requests == 0:
+            return 0.0
+        return (
+            self.preemptions + self.rejected + self.truncated
+        ) / self.num_requests
+
     def meets_slo(self, ttft_p99: float = 2.0, tpot_p99: float = 0.080) -> bool:
         """Paper SLO targets: P99 TTFT ≤ 2 s, P99 TPOT ≤ 80 ms."""
         return self.ttft_p99 <= ttft_p99 and self.tpot_p99 <= tpot_p99

@@ -169,6 +169,7 @@ class VectorPoolSim:
         self.wake_min = np.inf
         self.preemption_count = 0
         self.rejection_count = 0
+        self.truncation_count = 0
         self._seq_counter = 0
         self._records = _ColumnStore()
         self._completed_ids: list[np.ndarray] = []
@@ -181,6 +182,10 @@ class VectorPoolSim:
     @property
     def rejections(self) -> int:
         return self.rejection_count
+
+    @property
+    def truncations(self) -> int:
+        return self.truncation_count
 
     @property
     def busy(self) -> bool:
@@ -382,6 +387,7 @@ class VectorPoolSim:
             if context >= c_max and self.decode_remaining[i, s] > 0:
                 self.truncated[i, s] = True
                 self.decode_remaining[i, s] = 0
+                self.truncation_count += 1
 
             if self.decode_remaining[i, s] == 0:
                 alive.remove(s)
@@ -524,6 +530,7 @@ class VectorPoolSim:
             )
             rem_after = np.where(trunc, 0, rem_after)
             trunc_all = self.truncated[gv] | trunc
+            self.truncation_count += int(trunc.sum())
 
             grow_v = np.maximum(need_end[v] - blocks_r[v], 0)
             self.blocks_free[gv] -= grow_v.sum(axis=1)

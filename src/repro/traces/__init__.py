@@ -3,6 +3,7 @@
 from repro.traces.cdf import AZURE, LMSYS, TRACES, BucketCDF, describe, get_trace_cdf
 from repro.traces.generator import (
     CATEGORY_MIX,
+    RATE_PROFILES,
     TraceColumns,
     TraceSpec,
     generate_trace,
@@ -18,6 +19,7 @@ __all__ = [
     "describe",
     "get_trace_cdf",
     "CATEGORY_MIX",
+    "RATE_PROFILES",
     "TraceColumns",
     "TraceSpec",
     "generate_trace",

@@ -1,0 +1,160 @@
+"""Cold-start calibration parity: scalar vs JAX Eq. 4 paths.
+
+The vectorized fleet backend syncs its EMA through ``jax_update_stream``
+(``EmaCalibrator.observe_batch``) while the reference backend calls
+``EmaCalibrator.observe`` per response. The two implementations must agree
+from a cold start to float32 tolerance — in particular the *first*
+observation per category, where both the ratio AND the sigma EMA replace
+the prior outright (the same blend factor ``b`` drives both; a
+beta-weighted sigma would diverge whenever the prior sigma is nonzero at
+count=0).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibration import (
+    CalibState,
+    EmaCalibrator,
+    init_state,
+    jax_update,
+    jax_update_stream,
+)
+from repro.core.categories import NUM_CATEGORIES
+
+F32_RTOL = 1e-5
+F32_ATOL = 1e-6
+
+
+def stream_state(obs):
+    """Fold (bytes, tokens, category) observations through the JAX path."""
+    return jax_update_stream(
+        init_state(),
+        jnp.array([o[0] for o in obs], jnp.float32),
+        jnp.array([o[1] for o in obs], jnp.float32),
+        jnp.array([o[2] for o in obs], jnp.int32),
+    )
+
+
+def scalar_state(obs):
+    cal = EmaCalibrator()
+    for b, p, k in obs:
+        cal.observe(b, p, k)
+    return cal
+
+
+def assert_parity(cal: EmaCalibrator, state: CalibState):
+    np.testing.assert_allclose(
+        np.asarray(state.ratio), np.asarray(cal.ratio, np.float32),
+        rtol=F32_RTOL, atol=F32_ATOL,
+    )
+    np.testing.assert_allclose(
+        np.asarray(state.sigma), np.asarray(cal.sigma, np.float32),
+        rtol=F32_RTOL, atol=F32_ATOL,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state.count), np.asarray(cal.count)
+    )
+
+
+class TestColdStartParity:
+    @pytest.mark.parametrize("category", range(NUM_CATEGORIES))
+    def test_first_sample_per_category(self, category):
+        """First observation: ratio ← c_obs, sigma ← 0, in BOTH paths."""
+        obs = [(3000, 1000, category)]  # c_obs = 3.0
+        cal = scalar_state(obs)
+        state = stream_state(obs)
+        assert cal.ratio[category] == pytest.approx(3.0)
+        assert cal.sigma[category] == 0.0
+        assert float(state.sigma[category]) == 0.0
+        assert_parity(cal, state)
+
+    @pytest.mark.parametrize("category", range(NUM_CATEGORIES))
+    def test_second_sample_per_category(self, category):
+        """Second observation: sigma ← (1−β)·dev, identically in both."""
+        obs = [(3000, 1000, category), (5000, 1000, category)]
+        cal = scalar_state(obs)
+        state = stream_state(obs)
+        assert cal.sigma[category] > 0.0
+        assert_parity(cal, state)
+
+    def test_interleaved_categories_from_cold(self):
+        rng = np.random.default_rng(7)
+        obs = [
+            (int(rng.integers(100, 50_000)), int(rng.integers(1, 10_000)),
+             int(rng.integers(0, NUM_CATEGORIES)))
+            for _ in range(200)
+        ]
+        cal = scalar_state(obs)
+        state = stream_state(obs)
+        np.testing.assert_allclose(
+            np.asarray(state.ratio), np.asarray(cal.ratio, np.float32),
+            rtol=1e-4,
+        )
+        np.testing.assert_allclose(
+            np.asarray(state.sigma), np.asarray(cal.sigma, np.float32),
+            rtol=1e-3, atol=1e-5,
+        )
+
+    def test_sigma_prior_replaced_at_count_zero(self):
+        """Regression for the sigma-EMA cold-start bug: with a nonzero
+        sigma prior at count=0 the first observation must *replace* the
+        prior (b=0), not beta-blend it — in both implementations."""
+        cal = EmaCalibrator()
+        cal.sigma[1] = 5.0  # stale prior, count still 0
+        cal.observe(3000, 1000, 1)
+        assert cal.sigma[1] == 0.0  # dev of the first sample is 0
+
+        state = CalibState(
+            ratio=init_state().ratio,
+            sigma=init_state().sigma.at[1].set(5.0),
+            count=init_state().count,
+        )
+        state = jax_update(
+            state,
+            jnp.float32(3000.0),
+            jnp.float32(1000.0),
+            jnp.int32(1),
+        )
+        assert float(state.sigma[1]) == 0.0
+
+    def test_observe_batch_syncs_scalar_state(self):
+        """observe_batch (the vectorized backend's epoch sync) lands on the
+        same scalar state as per-response observe calls."""
+        rng = np.random.default_rng(11)
+        obs = [
+            (int(rng.integers(100, 50_000)), int(rng.integers(1, 10_000)),
+             int(rng.integers(0, NUM_CATEGORIES)))
+            for _ in range(300)
+        ]
+        loop = scalar_state(obs)
+        batched = EmaCalibrator()
+        batched.observe_batch(
+            [o[0] for o in obs], [o[1] for o in obs], [o[2] for o in obs]
+        )
+        np.testing.assert_allclose(
+            batched.ratio, np.asarray(loop.ratio, np.float32), rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            batched.sigma, np.asarray(loop.sigma, np.float32),
+            rtol=1e-3, atol=1e-5,
+        )
+        assert batched.count == loop.count
+
+    def test_padding_rows_are_inert(self):
+        """prompt_tokens=0 rows (observe_batch shape padding) never touch
+        the state in either path."""
+        cal = EmaCalibrator()
+        cal.observe(1000, 0, 0)
+        assert cal.count[0] == 0
+        state = jax_update(
+            init_state(), jnp.float32(1000.0), jnp.float32(0.0), jnp.int32(0)
+        )
+        assert int(state.count[0]) == 0
+        np.testing.assert_array_equal(
+            np.asarray(state.ratio), np.asarray(init_state().ratio)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(state.sigma), np.asarray(init_state().sigma)
+        )

@@ -371,3 +371,173 @@ class TestAdaptiveThreshold:
                 short_instances=1, long_queue=0, long_instances=10,
             )
         assert c.b_short >= 512
+
+
+class TestAdaptiveController:
+    """N-boundary AIMD over a PoolSet: clamp + ordering invariants."""
+
+    def _two_pool(self, b=8192):
+        from repro.core.adaptive import AdaptiveController
+
+        ps = PoolSet([_state("short", 8192), _state("long", 65_536)], [b])
+        return AdaptiveController(ps, b_min=512), ps
+
+    def _three_pool(self, th=(4096, 16_384)):
+        from repro.core.adaptive import AdaptiveController
+
+        ps = PoolSet(
+            [_state("p4k", 4096), _state("p16k", 16_384), _state("p64k", 65_536)],
+            list(th),
+        )
+        return AdaptiveController(ps, b_min=512), ps
+
+    @staticmethod
+    def _quiet(p):
+        return dict(errors=[0] * p, queues=[0] * p, instances=[10] * p)
+
+    def test_errors_tighten_first_boundary(self):
+        c, ps = self._two_pool()
+        new = c.update(
+            window_requests=100, errors=[5, 0], queues=[0, 0],
+            instances=[10, 10],
+        )
+        assert new[0] < 8192
+        assert list(ps.thresholds) == new  # applied to the live PoolSet
+        assert len(c.history) == 1 and c.history[0].reason == "decrease"
+
+    def test_quiet_window_relaxes_to_cmax(self):
+        c, ps = self._two_pool(b=4096)
+        for _ in range(20):
+            c.update(window_requests=100, **self._quiet(2))
+        assert int(ps.thresholds[0]) == 8192  # clamped at short C_max
+
+    def test_floor_holds_under_sustained_errors(self):
+        c, ps = self._two_pool()
+        for _ in range(50):
+            c.update(
+                window_requests=100, errors=[50, 0], queues=[1000, 0],
+                instances=[1, 10],
+            )
+        assert int(ps.thresholds[0]) >= 512
+
+    @pytest.mark.parametrize("rounds", [1, 30])
+    def test_three_pool_ordering_invariant(self, rounds):
+        """Adversarial per-boundary pressure can never break
+        B_1 < B_2 ≤ C_max,k (PoolSet would reject the vector)."""
+        c, ps = self._three_pool()
+        rng = np.random.default_rng(3)
+        for _ in range(rounds):
+            c.update(
+                window_requests=100,
+                errors=[int(rng.integers(0, 20)) for _ in range(3)],
+                queues=[int(rng.integers(0, 2000)) for _ in range(3)],
+                instances=[1 + int(rng.integers(0, 10)) for _ in range(3)],
+            )
+            th = list(ps.thresholds)
+            assert th[0] < th[1]
+            assert th[0] <= ps.configs[0].c_max
+            assert th[1] <= ps.configs[1].c_max
+            assert th[0] >= 512
+
+    def test_three_pool_boundaries_move_independently(self):
+        """Errors in the middle pool tighten B_2 without touching B_1."""
+        c, ps = self._three_pool()
+        new = c.update(
+            window_requests=100, errors=[0, 10, 0], queues=[0, 0, 500],
+            instances=[10, 10, 10],
+        )
+        assert new[0] == 4096
+        assert new[1] < 16_384
+
+    def test_decrease_cannot_cross_lower_boundary(self):
+        """B_2 collapsing under sustained pressure stops strictly above
+        B_1, preserving the middle pool's slice."""
+        c, ps = self._three_pool(th=(4096, 5000))
+        for _ in range(40):
+            c.update(
+                window_requests=100, errors=[0, 50, 0], queues=[0, 2000, 0],
+                instances=[10, 1, 10],
+            )
+        th = list(ps.thresholds)
+        assert th[0] == 4096
+        assert th[1] == 4097  # pinned one above B_1
+
+    def test_increase_cannot_cross_upper_boundary(self):
+        """B_1 relaxing under quiet traffic stops strictly below B_2."""
+        c, ps = self._three_pool(th=(3000, 3500))
+        for _ in range(20):
+            c.update(
+                window_requests=100, errors=[0, 10, 0], queues=[0, 800, 0],
+                instances=[10, 1, 10],
+            )
+        th = list(ps.thresholds)
+        assert th[0] < th[1] <= 3500
+
+    def test_empty_window_holds(self):
+        c, ps = self._two_pool()
+        before = list(ps.thresholds)
+        c.update(window_requests=0, errors=[99, 0], queues=[999, 0],
+                 instances=[1, 1])
+        assert list(ps.thresholds) == before
+        assert c.history == []
+
+    def test_signal_length_mismatch_raises(self):
+        c, _ = self._two_pool()
+        with pytest.raises(ValueError):
+            c.update(window_requests=100, errors=[1], queues=[0, 0],
+                     instances=[1, 1])
+
+    def test_unbound_controller_raises(self):
+        from repro.core.adaptive import AdaptiveController
+
+        c = AdaptiveController()
+        with pytest.raises(RuntimeError):
+            c.update(window_requests=100, errors=[0, 0], queues=[0, 0],
+                     instances=[1, 1])
+
+    def test_single_pool_bind_rejected(self):
+        from repro.core.adaptive import AdaptiveController
+
+        ps = PoolSet([_state("only", 8192)], [])
+        with pytest.raises(ValueError):
+            AdaptiveController(ps)
+
+    def test_router_hot_path_sees_moves(self):
+        """The router's inlined threshold alias tracks controller moves."""
+        c, ps = self._two_pool()
+        r = TokenBudgetRouter(pools=ps, spillover=False)
+        d = r.route(Request(0, byte_len=4, max_output_tokens=5000, category=0))
+        assert d.pool == "short"
+        for _ in range(2):  # 8192 → 6144 → 4608
+            c.update(window_requests=100, errors=[10, 0], queues=[0, 0],
+                     instances=[10, 10])
+        assert int(ps.thresholds[0]) < 5000
+        d = r.route(Request(1, byte_len=4, max_output_tokens=5000, category=0))
+        assert d.pool == "long"
+
+
+class TestPoolSetSetThresholds:
+    def test_atomic_replace(self):
+        ps = PoolSet(
+            [_state("a", 4096), _state("b", 16_384), _state("c", 65_536)],
+            [2048, 8192],
+        )
+        ps.set_thresholds([1024, 4096])
+        assert list(ps.thresholds) == [1024, 4096]
+
+    def test_invalid_vector_restores_previous(self):
+        ps = PoolSet([_state("a", 4096), _state("b", 65_536)], [2048])
+        with pytest.raises(ValueError):
+            ps.set_thresholds([100_000])  # exceeds pool-a C_max
+        assert list(ps.thresholds) == [2048]
+
+    def test_length_mismatch_rejected(self):
+        ps = PoolSet([_state("a", 4096), _state("b", 65_536)], [2048])
+        with pytest.raises(ValueError):
+            ps.set_thresholds([1024, 2048])
+
+    def test_mutates_in_place_for_aliases(self):
+        ps = PoolSet([_state("a", 4096), _state("b", 65_536)], [2048])
+        alias = ps._thresholds  # the router's hot-path view
+        ps.set_thresholds([1500])
+        assert alias == [1500]

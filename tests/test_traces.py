@@ -112,6 +112,142 @@ class TestGenerator:
         assert all(r.max_output_tokens == r.true_output_tokens for r in exact)
 
 
+class TestNonstationary:
+    """Scenario axes of TraceSpec: arrival-rate modulation, category-mix
+    drift, bytes/token drift — stationary defaults stay bit-identical to
+    the paper's recipe."""
+
+    @staticmethod
+    def _rate_in(arr, lo, hi):
+        return ((arr >= lo) & (arr < hi)).sum() / (hi - lo)
+
+    def test_stationary_knobs_are_inert(self):
+        base = generate_trace_columns(TraceSpec(num_requests=1500, seed=7))
+        explicit = generate_trace_columns(
+            TraceSpec(
+                num_requests=1500, seed=7,
+                rate_profile="stationary", rate_amplitude=0.0,
+                mix_drift=0.0, bytes_drift=0.0,
+            )
+        )
+        for f in ("arrival_time", "byte_len", "category"):
+            np.testing.assert_array_equal(
+                getattr(base, f), getattr(explicit, f), err_msg=f
+            )
+
+    def test_burst_profile_rate(self):
+        """Inside the burst window the measured rate is ~(1+A)·λ; the
+        surrounding plateau stays at λ."""
+        n, rate = 60_000, 1000.0  # nominal 60 s trace; burst at t≈24 s
+        cols = generate_trace_columns(
+            TraceSpec(
+                num_requests=n, rate=rate, seed=1,
+                rate_profile="burst", rate_amplitude=2.0, rate_period=10.0,
+            )
+        )
+        arr = cols.arrival_time
+        assert self._rate_in(arr, 5, 20) == pytest.approx(rate, rel=0.1)
+        assert self._rate_in(arr, 25, 33) == pytest.approx(3 * rate, rel=0.1)
+
+    def test_step_profile_rate(self):
+        n, rate = 60_000, 1000.0
+        cols = generate_trace_columns(
+            TraceSpec(
+                num_requests=n, rate=rate, seed=1,
+                rate_profile="step", rate_amplitude=1.0, rate_period=20.0,
+            )
+        )
+        arr = cols.arrival_time
+        assert self._rate_in(arr, 5, 18) == pytest.approx(rate, rel=0.1)
+        assert self._rate_in(arr, 22, 40) == pytest.approx(2 * rate, rel=0.1)
+
+    def test_diurnal_profile_rate(self):
+        n, rate = 60_000, 1000.0
+        cols = generate_trace_columns(
+            TraceSpec(
+                num_requests=n, rate=rate, seed=1,
+                rate_profile="diurnal", rate_amplitude=0.8, rate_period=20.0,
+            )
+        )
+        arr = cols.arrival_time
+        peak = self._rate_in(arr, 3, 7)  # sin peak at t = T/4 = 5 s
+        trough = self._rate_in(arr, 13, 17)  # sin trough at 3T/4 = 15 s
+        assert peak > 1.5 * rate
+        assert trough < 0.5 * rate
+
+    @pytest.mark.parametrize("profile,amplitude", [
+        ("burst", 2.0), ("diurnal", 0.8), ("step", 1.0),
+    ])
+    def test_warped_arrivals_sorted_positive(self, profile, amplitude):
+        cols = generate_trace_columns(
+            TraceSpec(
+                num_requests=3000, rate=300.0, seed=5,
+                rate_profile=profile, rate_amplitude=amplitude,
+                rate_period=3.0,
+            )
+        )
+        arr = cols.arrival_time
+        assert (arr[1:] >= arr[:-1]).all()
+        assert (arr > 0).all()
+
+    def test_mix_drift_moves_toward_target(self):
+        """Full drift toward LMSYS: the tail of the trace matches the
+        LMSYS category mix (CJK-heavy), the head keeps Azure's."""
+        cols = generate_trace_columns(
+            TraceSpec(
+                trace="azure", num_requests=40_000, seed=1,
+                mix_drift=1.0, drift_trace="lmsys",
+            )
+        )
+        head, tail = cols.category[:5000], cols.category[-5000:]
+        from repro.core.categories import Category
+
+        cjk = int(Category.CJK_TEXT)
+        assert (head == cjk).mean() == pytest.approx(0.08, abs=0.02)
+        assert (tail == cjk).mean() == pytest.approx(0.22, abs=0.03)
+
+    def test_bytes_drift_scales_ratio(self):
+        """bytes_drift=-0.5 halves bytes/token by the end of the trace."""
+        spec = TraceSpec(num_requests=40_000, seed=1, bytes_drift=-0.5)
+        drifted = generate_trace_columns(spec)
+        base = generate_trace_columns(TraceSpec(num_requests=40_000, seed=1))
+        head = (drifted.byte_len[:4000] / base.byte_len[:4000]).mean()
+        tail = (drifted.byte_len[-4000:] / base.byte_len[-4000:]).mean()
+        assert head == pytest.approx(1.0, abs=0.05)
+        assert tail == pytest.approx(0.5, abs=0.06)
+
+    def test_nonstationary_columns_match_objects(self):
+        """The scenario axes are implemented once: object and columnar
+        entry points stay bit-identical for a fully nonstationary spec."""
+        spec = TraceSpec(
+            trace="azure", num_requests=2000, rate=200.0, seed=13,
+            rate_profile="diurnal", rate_amplitude=0.6, rate_period=2.0,
+            mix_drift=0.8, bytes_drift=0.3,
+        )
+        native = generate_trace_columns(spec)
+        via_objects = TraceColumns.from_requests(generate_trace(spec))
+        import dataclasses
+
+        for f in dataclasses.fields(TraceColumns):
+            np.testing.assert_array_equal(
+                getattr(native, f.name), getattr(via_objects, f.name),
+                err_msg=f.name,
+            )
+
+    @pytest.mark.parametrize("bad", [
+        dict(rate_profile="tsunami"),
+        dict(rate_profile="diurnal", rate_amplitude=1.5),
+        dict(rate_profile="burst", rate_amplitude=-1.0),
+        dict(rate_profile="burst", rate_period=0.0),
+        dict(mix_drift=1.5),
+        dict(mix_drift=0.5, drift_trace="nope"),
+        dict(bytes_drift=-1.0),
+    ])
+    def test_invalid_scenarios_rejected(self, bad):
+        with pytest.raises(ValueError):
+            generate_trace_columns(TraceSpec(num_requests=10, **bad))
+
+
 class TestTraceColumns:
     @pytest.mark.parametrize("trace", ["azure", "lmsys"])
     def test_bit_identical_to_object_path(self, trace):
