@@ -25,7 +25,10 @@ vectorized backend:
 
 Reported per scenario: P99 TTFT and the composite error rate
 (preemptions+rejections+truncations — the controller's §8 contract) for
-static vs adaptive, plus the controller's boundary trajectory.
+static vs adaptive, plus the boundary trajectory and pressure peaks —
+rendered from the run's windowed telemetry (``FleetResult.telemetry``),
+the same series the controller acted on, rather than ad-hoc trajectory
+lists.
 """
 
 from __future__ import annotations
@@ -33,11 +36,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from collections import Counter
 from typing import Optional
 
 from benchmarks.common import emit
 from repro.core.adaptive import AdaptiveController
 from repro.core.pools import PoolConfig, n_seq_for_cmax
+from repro.obs import TelemetryConfig
 from repro.sim import A100_LLAMA3_70B, FleetSim, plan_fleet
 from repro.traces import TraceSpec, generate_trace_columns
 
@@ -119,6 +124,7 @@ def run_scenario(
             backend=backend,
             controller=controller,
             control_window=control_window,
+            telemetry=TelemetryConfig(window=control_window),
         )
         t0 = time.perf_counter()
         res = sim.run(cols)
@@ -126,9 +132,11 @@ def run_scenario(
         s = res.summary
         extra = ""
         if controller is not None:
+            reasons = Counter(m.reason for m in controller.history)
             extra = (
                 f";moves={len(controller.history)}"
                 f";final_b={controller.thresholds[0]}"
+                f";reasons={'/'.join(f'{r}x{c}' for r, c in sorted(reasons.items()))}"
             )
         emit(
             f"beyond/adaptive/{sc.name}/{label}",
@@ -136,14 +144,54 @@ def run_scenario(
             f"ttft_p99={s.ttft_p99:.2f};err_rate={s.error_rate:.4f};"
             f"spills={s.spills};success={s.success_rate:.4f}{extra}",
         )
-        if controller is not None and controller.history:
-            traj = "|".join(
-                f"{m.t}:{m.value}" for m in controller.history[:24]
-            )
-            emit(f"beyond/adaptive/{sc.name}/trajectory", 0.0, traj)
+        _emit_telemetry_rows(sc.name, label, res, adaptive=controller is not None)
         out[label] = res
         out[f"{label}_controller"] = controller
     return out
+
+
+def _emit_telemetry_rows(
+    scenario: str, label: str, res, *, adaptive: bool
+) -> None:
+    """Render the scenario's story from the run's windowed telemetry.
+
+    The boundary trajectory is read off the sampled ``threshold.0`` series
+    (change points only, as ``t_req:value`` pairs — the exact post-move
+    vector each window's requests were routed with), and the pressure peaks
+    come from the same per-window queue/error series the controller saw.
+    """
+    tel = res.telemetry
+    if tel is None or tel.num_samples == 0:
+        return
+    if adaptive:
+        t_req = tel.columns["t_req"]
+        th = tel.columns["threshold.0"]
+        points = [f"{t_req[0]}:{th[0]}"]
+        for t, b, prev in zip(t_req[1:], th[1:], th[:-1]):
+            if b != prev:
+                points.append(f"{t}:{b}")
+        emit(
+            f"beyond/adaptive/{scenario}/trajectory",
+            0.0,
+            "|".join(points[:24]),
+        )
+    short = tel.pool_names[0]
+    queue = tel.columns[f"queue_depth.{short}"]
+    errs = [
+        p + r + t
+        for p, r, t in zip(
+            tel.columns[f"preemptions.{short}"],
+            tel.columns[f"rejections.{short}"],
+            tel.columns[f"truncations.{short}"],
+        )
+    ]
+    kv = tel.columns[f"kv_frac.{short}"]
+    emit(
+        f"beyond/adaptive/{scenario}/{label}/pressure",
+        0.0,
+        f"peak_queue={max(queue)};peak_win_errs={max(errs)};"
+        f"peak_kv={max(kv):.3f};windows={tel.num_samples}",
+    )
 
 
 def run_scenarios(

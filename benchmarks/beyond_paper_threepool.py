@@ -28,7 +28,14 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.calibration import EmaCalibrator
 from repro.core.pools import PoolConfig, n_seq_for_cmax
-from repro.sim import A100_LLAMA3_70B, FleetSim, PoolProfile, profile_pool
+from repro.sim import (
+    A100_LLAMA3_70B,
+    PAPER_SLO,
+    FleetSim,
+    PoolProfile,
+    SLOTarget,
+    profile_pool,
+)
 from repro.sim.profiler import HEADROOM
 from repro.traces import TraceColumns, TraceSpec, generate_trace_columns
 
@@ -117,10 +124,17 @@ def analytic_fleet(
 
 
 def _passes(res) -> bool:
-    return res.summary.success_rate == 1.0 and res.summary.meets_slo()
+    """SLO gate against the run's own target (``FleetResult.slo``)."""
+    return res.summary.success_rate == 1.0 and res.meets_slo()
 
 
-def _run_scaled(cols: TraceColumns, n_pools: int, base: list[int], m: float):
+def _run_scaled(
+    cols: TraceColumns,
+    n_pools: int,
+    base: list[int],
+    m: float,
+    slo: SLOTarget = PAPER_SLO,
+):
     """One vectorized DES run with every pool scaled by multiplier ``m``."""
     cfgs = pool_configs(n_pools)
     pools = {
@@ -133,12 +147,18 @@ def _run_scaled(cols: TraceColumns, n_pools: int, base: list[int], m: float):
         A100_LLAMA3_70B,
         thresholds=list(th) if th else None,
         backend="vectorized",
+        slo=slo,
     )
     return sim, sim.run(cols)
 
 
 def minimal_sim_fleet(
-    cols: TraceColumns, n_pools: int, rate: float, *, iters: int = 3
+    cols: TraceColumns,
+    n_pools: int,
+    rate: float,
+    *,
+    iters: int = 3,
+    slo: SLOTarget = PAPER_SLO,
 ) -> tuple[int, int, "object", bool]:
     """Smallest SLO-meeting fleet the DES will accept for this topology.
 
@@ -154,16 +174,16 @@ def minimal_sim_fleet(
     analytic_total = sum(p.instances for p in profiles)
 
     lo, hi = 0.5, 1.0
-    _, res = _run_scaled(cols, n_pools, base, hi)
+    _, res = _run_scaled(cols, n_pools, base, hi, slo)
     while not _passes(res) and hi < 1.6:
         lo = hi  # this multiplier failed — bisect above it, not below
         hi *= 1.2
-        _, res = _run_scaled(cols, n_pools, base, hi)
+        _, res = _run_scaled(cols, n_pools, base, hi, slo)
     best_m, best_res = hi, res
     if _passes(res):
         for _ in range(iters):
             mid = (lo + hi) / 2.0
-            _, res = _run_scaled(cols, n_pools, base, mid)
+            _, res = _run_scaled(cols, n_pools, base, mid, slo)
             if _passes(res):
                 hi, best_m, best_res = mid, mid, res
             else:
@@ -172,7 +192,12 @@ def minimal_sim_fleet(
     return total, analytic_total, best_res, _passes(best_res)
 
 
-def run(num_requests: int = 4000, rate: float = 40.0, seed: int = 42) -> dict:
+def run(
+    num_requests: int = 4000,
+    rate: float = 40.0,
+    seed: int = 42,
+    slo: SLOTarget = PAPER_SLO,
+) -> dict:
     """Measure the 1/2/3-pool comparison at a ~100 s arrival span.
 
     The arrival span must dwarf the longest per-request service time or
@@ -214,7 +239,9 @@ def run(num_requests: int = 4000, rate: float = 40.0, seed: int = 42) -> dict:
         all_met = True
         for n_pools in (1, 2, 3):
             t0 = time.perf_counter()
-            g_sim, g_analytic, res, slo_met = minimal_sim_fleet(cols, n_pools, rate)
+            g_sim, g_analytic, res, slo_met = minimal_sim_fleet(
+                cols, n_pools, rate, slo=slo
+            )
             wall = (time.perf_counter() - t0) * 1e6
             sim_fleet[n_pools] = g_sim
             all_met &= slo_met

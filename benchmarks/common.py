@@ -1,15 +1,25 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + JSON artifacts.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows: `us_per_call`
 times the benchmark's own computation (the algorithm under test — e.g. one
 routing decision, one DES run), `derived` carries the headline quantity the
 paper's table reports (savings %, fleet size, μ, ...).
+
+Rows also accumulate in-process so a runner can dump the whole session as a
+machine-readable artifact (:func:`write_json`) — per-row ``us_per_call``
+plus the derived metrics parsed into key/value pairs, stamped with the git
+SHA, for perf-trajectory tracking across commits.
 """
 
 from __future__ import annotations
 
+import json
+import subprocess
 import time
 from typing import Callable
+
+#: Rows emitted this process: (name, us_per_call, derived-string).
+_ROWS: list[tuple[str, float, str]] = []
 
 
 def time_us(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
@@ -24,4 +34,72 @@ def time_us(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
+    _ROWS.append((name, float(us_per_call), str(derived)))
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def reset_rows() -> None:
+    _ROWS.clear()
+
+
+def _git_sha() -> str:
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                capture_output=True,
+                text=True,
+                timeout=10,
+            ).stdout.strip()
+            or "unknown"
+        )
+    except OSError:
+        return "unknown"
+
+
+def _parse_derived(derived: str) -> dict:
+    """Split a ``k=v;k=v`` derived string into typed key/values; strings
+    that don't follow the convention come back under ``{"value": ...}``."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    if not out and derived:
+        out["value"] = derived
+    return out
+
+
+def rows_as_json(extra: dict | None = None) -> dict:
+    """The session's emitted rows as one artifact dict."""
+    doc = {
+        "schema": "repro.bench/rows-v1",
+        "git_sha": _git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "rows": [
+            {
+                "name": name,
+                "us_per_call": us,
+                "derived": _parse_derived(derived),
+                "derived_raw": derived,
+            }
+            for name, us, derived in _ROWS
+        ],
+    }
+    if extra:
+        doc.update(extra)
+    return doc
+
+
+def write_json(path: str, extra: dict | None = None) -> None:
+    """Dump every row emitted so far to ``path`` (see ``rows_as_json``)."""
+    with open(path, "w") as f:
+        json.dump(rows_as_json(extra), f, indent=2)
+        f.write("\n")

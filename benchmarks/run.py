@@ -1,7 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 
 ``python -m benchmarks.run`` runs everything and prints
-``name,us_per_call,derived`` CSV rows (plus a header).
+``name,us_per_call,derived`` CSV rows (plus a header). ``--json PATH``
+additionally writes the whole session as a machine-readable artifact —
+per-row ``us_per_call`` + parsed derived metrics + git SHA — so CI can
+archive a perf trajectory across commits (see ``benchmarks.common``).
 
 Modules:
   table1_pools        — Table 1 pool configs + μ
@@ -15,17 +18,31 @@ Modules:
   dispatch_overhead   — §2.2 O(1) sub-microsecond dispatch
   roofline            — §Roofline table from dry-run records
   sim_throughput      — reference vs vectorized DES backend speedup
+  telemetry_smoke     — repro.obs telemetry schema + zero-overhead checks
 
 Exits non-zero when any module fails (CI gates on this).
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
+from benchmarks.common import write_json
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="also write the emitted rows as a JSON artifact "
+        "(us_per_call + parsed derived metrics + git SHA)",
+    )
+    args = ap.parse_args()
+
     from benchmarks import (
         beyond_paper_adaptive,
         beyond_paper_int8kv,
@@ -41,6 +58,7 @@ def main() -> None:
         table3_latency,
         table4_calibration,
         table5_mi300x,
+        telemetry_smoke,
     )
 
     print("name,us_per_call,derived")
@@ -59,15 +77,20 @@ def main() -> None:
         beyond_paper_adaptive,
         roofline,
         sim_throughput,
+        telemetry_smoke,
     ]
     failed = 0
+    errors: list[str] = []
     for mod in modules:
         try:
             mod.run()
         except Exception as e:
             failed += 1
+            errors.append(f"{mod.__name__}: {type(e).__name__}: {e}")
             print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        write_json(args.json, extra={"failed_modules": errors})
     if failed:
         raise SystemExit(f"{failed} benchmark modules failed")
 

@@ -39,8 +39,9 @@ from benchmarks.beyond_paper_threepool import (
     pool_configs,
     thresholds_for,
 )
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.core.pools import PoolConfig, n_seq_for_cmax
+from repro.obs import TelemetryConfig
 from repro.sim import A100_LLAMA3_70B, plan_fleet, run_fleet
 from repro.traces import TraceSpec, generate_trace_columns
 
@@ -128,17 +129,79 @@ def bench_scale(
     return walls
 
 
+def bench_telemetry_overhead(
+    num_requests: int = 10_000, *, seed: int = 42, window: int = 200
+) -> dict[str, float]:
+    """Telemetry cost on the vectorized hot path: off vs sampling vs tracing.
+
+    Three identically-seeded runs of the same fleet: telemetry fully off
+    (the default — only ``tracer is None`` guards on the hot path), windowed
+    sampling only, and sampling + event tracing. The *off* run is the
+    configuration CI's throughput gate sees, so its overhead relative to the
+    other rows is what the <3% acceptance bar constrains; the ``overhead``
+    row reports both enabled modes relative to off. Best-of-3 wall times to
+    suppress scheduler noise at CI scale.
+    """
+    rate = max(50.0, RATE_PER_10K * num_requests / 10_000)
+    cols = generate_trace_columns(
+        TraceSpec(trace="azure", num_requests=num_requests, rate=rate, seed=seed)
+    )
+    pools, thresholds = build_pools(cols, rate, 2)
+    modes = {
+        "off": None,
+        "sampling": TelemetryConfig(window=window),
+        "tracing": TelemetryConfig(window=window, events=True),
+    }
+    # JIT warmup (see bench_scale).
+    run_fleet(
+        cols.head(min(len(cols), 4096)),
+        pools,
+        A100_LLAMA3_70B,
+        backend="vectorized",
+        thresholds=thresholds,
+    )
+    walls: dict[str, float] = {}
+    for mode, telemetry in modes.items():
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            run_fleet(
+                cols,
+                pools,
+                A100_LLAMA3_70B,
+                backend="vectorized",
+                thresholds=thresholds,
+                telemetry=telemetry,
+            )
+            best = min(best, time.perf_counter() - t0)
+        walls[mode] = best
+        emit(
+            f"sim_throughput/telemetry/{mode}/n={num_requests}",
+            best * 1e6,
+            f"req_per_s={num_requests / best:.0f}",
+        )
+    emit(
+        f"sim_throughput/telemetry/overhead/n={num_requests}",
+        0.0,
+        f"sampling_pct={100 * (walls['sampling'] / walls['off'] - 1):.1f};"
+        f"tracing_pct={100 * (walls['tracing'] / walls['off'] - 1):.1f}",
+    )
+    return walls
+
+
 def run() -> None:
     """Aggregate-suite entry (`python -m benchmarks.run`).
 
     Both backends at 10k; vectorized-only at 100k (the reference backend
     needs ~30 min there — run it explicitly via the CLI when you want the
     full-scale speedup number); a 10k three-pool vectorized run covers the
-    N-way routing path.
+    N-way routing path, and a telemetry on/off comparison quantifies the
+    observability overhead.
     """
     bench_scale(10_000)
     bench_scale(10_000, ("vectorized",), n_pools=3)
     bench_scale(100_000, ("vectorized",))
+    bench_telemetry_overhead(10_000)
 
 
 def main() -> None:
@@ -165,6 +228,17 @@ def main() -> None:
         help="pool topology: 2 = short/long (default), 3 = 4K/16K/64K",
     )
     parser.add_argument("--seed", type=int, default=42)
+    parser.add_argument(
+        "--telemetry-overhead",
+        action="store_true",
+        help="also benchmark telemetry off/sampling/tracing at each size",
+    )
+    parser.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="write the emitted rows as a JSON artifact (see benchmarks.common)",
+    )
     args = parser.parse_args()
     for n in args.requests:
         if args.backends:
@@ -174,6 +248,10 @@ def main() -> None:
                 ("vectorized",) if n >= 1_000_000 else ("reference", "vectorized")
             )
         bench_scale(n, backends, seed=args.seed, n_pools=args.pools)
+        if args.telemetry_overhead:
+            bench_telemetry_overhead(n, seed=args.seed)
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -71,12 +71,23 @@ def _aimd_move(
 
 @dataclasses.dataclass(frozen=True)
 class BoundaryMove:
-    """One recorded controller action (the trajectory unit)."""
+    """One recorded controller action (the trajectory unit).
+
+    Besides the move itself, the record carries the windowed signals that
+    caused it — the same per-pool observables the telemetry layer samples —
+    so a trajectory is self-explaining without replaying the run.
+    """
 
     t: int  # requests dispatched when the move fired
     boundary: int  # k: index into the threshold vector
     value: int  # B_k after the move
-    reason: str  # "decrease" | "increase"
+    reason: str  # "decrease" | "increase" | "clamp"
+    #: Windowed error rate of the low pool (errors / window_requests).
+    err_rate: float = 0.0
+    #: Queue pressure (queued per instance) of the pool below the boundary.
+    pressure_lo: float = 0.0
+    #: Queue pressure of the pool above the boundary.
+    pressure_hi: float = 0.0
 
 
 class AdaptiveController:
@@ -182,7 +193,15 @@ class AdaptiveController:
                 if new[k] != old[k]:
                     reason = reasons[k] if reasons[k] != "hold" else "clamp"
                     self.history.append(
-                        BoundaryMove(t=t, boundary=k, value=new[k], reason=reason)
+                        BoundaryMove(
+                            t=t,
+                            boundary=k,
+                            value=new[k],
+                            reason=reason,
+                            err_rate=errors[k] / window_requests,
+                            pressure_lo=pressure[k],
+                            pressure_hi=pressure[k + 1],
+                        )
                     )
         return new
 

@@ -1,0 +1,118 @@
+"""Schema validators for the telemetry exports.
+
+Each function parses an exported artifact, raises ``ValueError`` with a
+pointed message on the first violation, and returns the parsed object on
+success — so the CI telemetry smoke (``benchmarks/telemetry_smoke.py``) and
+the unit tests share one definition of "well-formed".
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.obs.events import EVENT_NAMES
+
+TELEMETRY_SCHEMA = "repro.obs/telemetry-v1"
+EVENTS_SCHEMA = "repro.obs/events-v1"
+
+#: Fleet-level columns every telemetry export carries.
+REQUIRED_COLUMNS = ("t_req", "t_sim", "spills")
+#: Per-pool column families (``<family>.<pool>``).
+POOL_COLUMNS = (
+    "queue_depth",
+    "active",
+    "slot_frac",
+    "kv_frac",
+    "preemptions",
+    "rejections",
+    "truncations",
+)
+
+
+def validate_telemetry(doc) -> dict:
+    """Validate a ``FleetTelemetry.to_dict()`` / ``to_json()`` artifact."""
+    if isinstance(doc, (str, bytes)):
+        doc = json.loads(doc)
+    if doc.get("schema") != TELEMETRY_SCHEMA:
+        raise ValueError(f"bad telemetry schema id: {doc.get('schema')!r}")
+    pools = doc.get("pools")
+    if not isinstance(pools, list) or not pools:
+        raise ValueError(f"telemetry 'pools' must be a non-empty list: {pools!r}")
+    cols = doc.get("columns")
+    if not isinstance(cols, dict):
+        raise ValueError("telemetry 'columns' must be a dict of lists")
+    n = doc.get("num_samples")
+    for name in REQUIRED_COLUMNS:
+        if name not in cols:
+            raise ValueError(f"missing telemetry column {name!r}")
+    for pool in pools:
+        for fam in POOL_COLUMNS:
+            if f"{fam}.{pool}" not in cols:
+                raise ValueError(f"missing per-pool column {fam}.{pool!r}")
+    for name, vals in cols.items():
+        if not isinstance(vals, list) or len(vals) != n:
+            raise ValueError(
+                f"column {name!r} has {len(vals) if isinstance(vals, list) else '?'}"
+                f" samples, expected num_samples={n}"
+            )
+    if not all(
+        b >= a for a, b in zip(cols["t_req"], cols["t_req"][1:])
+    ):
+        raise ValueError("t_req must be non-decreasing")
+    return doc
+
+
+def validate_events_jsonl(text: str) -> list[dict]:
+    """Validate an ``EventTrace.to_jsonl()`` export; returns the events."""
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError("empty JSONL export")
+    header = json.loads(lines[0])
+    if header.get("schema") != EVENTS_SCHEMA:
+        raise ValueError(f"bad events schema id: {header.get('schema')!r}")
+    tracks = set(header.get("pools", ())) | {"router"}
+    events = []
+    for i, ln in enumerate(lines[1:], start=2):
+        e = json.loads(ln)
+        for field in ("kind", "t", "pool", "request_id", "value"):
+            if field not in e:
+                raise ValueError(f"line {i}: missing field {field!r}")
+        if e["kind"] not in EVENT_NAMES:
+            raise ValueError(f"line {i}: unknown event kind {e['kind']!r}")
+        if e["pool"] not in tracks:
+            raise ValueError(f"line {i}: unknown pool {e['pool']!r}")
+        if e["t"] < 0:
+            raise ValueError(f"line {i}: negative timestamp {e['t']}")
+        events.append(e)
+    return events
+
+
+def validate_chrome_trace(text: str) -> dict:
+    """Validate an ``EventTrace.to_chrome_trace()`` export.
+
+    Checks the trace-event envelope Perfetto requires: a ``traceEvents``
+    list, ``thread_name`` metadata for every referenced track, and
+    well-formed instant events (``ph: "i"`` with µs ``ts``).
+    """
+    doc = json.loads(text)
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        raise ValueError("traceEvents must be a non-empty list")
+    named_tids = set()
+    for e in evs:
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") == "thread_name":
+                named_tids.add(e.get("tid"))
+            continue
+        if ph != "i":
+            raise ValueError(f"unexpected phase {ph!r} (only M/i are emitted)")
+        if e.get("name") not in EVENT_NAMES:
+            raise ValueError(f"unknown instant name {e.get('name')!r}")
+        if not isinstance(e.get("ts"), (int, float)) or e["ts"] < 0:
+            raise ValueError(f"bad ts on instant: {e.get('ts')!r}")
+        if e.get("pid") != 0 or e.get("tid") not in named_tids:
+            raise ValueError(
+                f"instant on unnamed track pid={e.get('pid')} tid={e.get('tid')}"
+            )
+    return doc

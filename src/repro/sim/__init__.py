@@ -20,8 +20,10 @@ any pool count, the paper's short/long pair being P=2.
 from repro.sim.engine import InstanceSim
 from repro.sim.fleet import FleetResult, FleetSim, PoolSim, run_fleet
 from repro.sim.metrics import (
+    PAPER_SLO,
     RequestRecord,
     SimSummary,
+    SLOTarget,
     concat_record_columns,
     percentile,
     summarize,
@@ -53,6 +55,8 @@ __all__ = [
     "run_fleet",
     "RequestRecord",
     "SimSummary",
+    "SLOTarget",
+    "PAPER_SLO",
     "concat_record_columns",
     "percentile",
     "summarize",

@@ -38,6 +38,7 @@ from repro.core.pools import (
     TOTAL_KV_BLOCKS,
 )
 from repro.core.router import Request
+from repro.obs.events import ADMIT, PREEMPT, REJECT, TRUNCATE
 from repro.sim.metrics import RequestRecord
 from repro.sim.timing import TimingModel
 
@@ -105,6 +106,12 @@ class InstanceSim:
         self.truncation_count = 0
         self.busy_time = 0.0
         self._carried_preemptions: dict[int, int] = {}
+        # Optional event tracing (repro.obs): the fleet layer installs an
+        # EventTrace and this instance's pool index. None (the default)
+        # keeps every emission site a single predicate on the hot path.
+        self.tracer = None
+        self.pool_index = 0
+        self._now = 0.0  # iteration-end time, maintained only when tracing
 
     # -- queue interface (fleet layer) ---------------------------------------
     @property
@@ -124,6 +131,10 @@ class InstanceSim:
         """Enqueue a request; reject if the prompt alone exceeds C_max."""
         if request.true_input_tokens >= self.pool.c_max:
             self.rejection_count += 1
+            if self.tracer is not None:
+                self.tracer.emit(
+                    REJECT, now, self.pool_index, request.request_id
+                )
             self.records.append(
                 RequestRecord(
                     request_id=request.request_id,
@@ -150,6 +161,10 @@ class InstanceSim:
                 self.queue.popleft()
                 self._state_add(-1, 0)
                 self.rejection_count += 1
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        REJECT, now, self.pool_index, request.request_id
+                    )
                 self.records.append(
                     RequestRecord(
                         request_id=request.request_id,
@@ -167,6 +182,10 @@ class InstanceSim:
             self.queue.popleft()
             self._state_add(-1, +1)
             self.blocks_free -= need
+            if self.tracer is not None:
+                self.tracer.emit(
+                    ADMIT, now, self.pool_index, request.request_id
+                )
             self.active.append(
                 _Seq(
                     request=request,
@@ -191,6 +210,10 @@ class InstanceSim:
         victim.blocks = 0
         victim.preemptions += 1
         self.preemption_count += 1
+        if self.tracer is not None:
+            self.tracer.emit(
+                PREEMPT, self._now, self.pool_index, victim.request.request_id
+            )
         self._carried_preemptions[victim.request.request_id] = victim.preemptions
         # Recompute mode: the sequence restarts prefill over prompt+generated.
         req = victim.request
@@ -212,6 +235,8 @@ class InstanceSim:
         n_active = len(self.active)
         t_iter = self.timing.iter_time(n_active)
         end = now + t_iter
+        if self.tracer is not None:
+            self._now = end  # timestamp for mid-iteration preempt events
         completed: list[RequestRecord] = []
 
         # 1) One prefill chunk of up to C tokens (oldest prefilling sequence).
@@ -260,6 +285,10 @@ class InstanceSim:
                 seq.truncated = True
                 seq.decode_remaining = 0
                 self.truncation_count += 1
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        TRUNCATE, end, self.pool_index, seq.request.request_id
+                    )
 
             if seq.decode_remaining == 0:
                 self.active.remove(seq)

@@ -57,10 +57,21 @@ from repro.core.adaptive import AdaptiveController
 from repro.core.calibration import EmaCalibrator
 from repro.core.pools import PoolConfig, PoolSet, PoolState
 from repro.core.router import Request, TokenBudgetRouter
+from repro.obs.events import (
+    ARRIVAL,
+    DISPATCH,
+    ROUTER_TRACK,
+    SPILL,
+    THRESHOLD_MOVE,
+    EventTrace,
+)
+from repro.obs.timeseries import FleetTelemetry, TelemetryConfig
 from repro.sim.engine import InstanceSim
 from repro.sim.metrics import (
+    PAPER_SLO,
     RequestRecord,
     SimSummary,
+    SLOTarget,
     concat_record_columns,
     summarize,
     summarize_columns,
@@ -104,6 +115,12 @@ class PoolSim:
     def least_loaded(self) -> InstanceSim:
         return min(self.instances, key=lambda i: i.load)
 
+    def kv_occupancy(self) -> float:
+        """Pool-wide KV block utilization: 1 − blocks_free / total_blocks."""
+        cap = sum(i.total_blocks for i in self.instances)
+        free = sum(i.blocks_free for i in self.instances)
+        return 1.0 - free / cap if cap else 0.0
+
     @property
     def records(self) -> list[RequestRecord]:
         return [r for inst in self.instances for r in inst.records]
@@ -138,6 +155,14 @@ class FleetResult:
     #: ``FleetSim.pools[name].record_arrays()`` (or ``.records`` to
     #: materialize RequestRecord objects) on the vectorized pools.
     records: Optional[list[RequestRecord]] = None
+    #: Windowed time series (+ optional event trace at ``telemetry.events``)
+    #: from :mod:`repro.obs`; populated when the fleet ran with telemetry.
+    telemetry: Optional[FleetTelemetry] = None
+    #: The SLO this fleet is evaluated against (``meets_slo()``).
+    slo: SLOTarget = PAPER_SLO
+
+    def meets_slo(self) -> bool:
+        return self.summary.meets_slo(self.slo)
 
 
 class FleetSim:
@@ -177,6 +202,8 @@ class FleetSim:
         coalesce_dt: Optional[float] = None,
         controller: Optional[AdaptiveController] = None,
         control_window: int = 512,
+        telemetry: Union[bool, TelemetryConfig, None] = None,
+        slo: SLOTarget = PAPER_SLO,
     ) -> None:
         if backend not in ("reference", "vectorized"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -232,8 +259,55 @@ class FleetSim:
                 by_state[id(s)] for s in self.router.pools.states
             ]
             self._ctrl_prev_errors = [0] * len(self._ctrl_pools)
-            self._ctrl_seen = 0
-            self._ctrl_prev_seen = 0
+
+        # -- telemetry / event tracing (repro.obs) ----------------------------
+        self.slo = slo
+        if telemetry is True:
+            telemetry = TelemetryConfig()
+        self.telemetry: Optional[FleetTelemetry] = None
+        self.tracer: Optional[EventTrace] = None
+        # Pool sims in PoolSet budget order (the frame thresholds and the
+        # controller use) — declaration order for the routerless baseline.
+        if self.router is not None:
+            by_state = {
+                id(p.state): (name, p) for name, p in self.pools.items()
+            }
+            ordered = [by_state[id(s)] for s in self.router.pools.states]
+        else:
+            ordered = list(self.pools.items())
+        self._pool_index = {name: i for i, (name, _) in enumerate(ordered)}
+        if telemetry is not None:
+            self.telemetry = FleetTelemetry(
+                telemetry,
+                [name for name, _ in ordered],
+                [p for _, p in ordered],
+                router=self.router,
+            )
+            self.tracer = self.telemetry.events
+            if self.tracer is not None:
+                for idx, (_, p) in enumerate(ordered):
+                    engines = (
+                        p.instances if isinstance(p, PoolSim) else (p,)
+                    )
+                    for eng in engines:
+                        eng.tracer = self.tracer
+                        eng.pool_index = idx
+        # Sampling/monitoring windows, counted in dispatched requests. With
+        # a controller the window IS the control window (telemetry samples
+        # land exactly on controller boundaries); telemetry alone may pick
+        # its own window.
+        self._win_size = 0
+        if controller is not None:
+            self._win_size = self.control_window
+        elif self.telemetry is not None:
+            self._win_size = int(
+                self.telemetry.config.window or self.control_window
+            )
+            if self._win_size <= 0:
+                raise ValueError("telemetry window must be positive")
+        self._win_seen = 0
+        self._win_prev_seen = 0
+        self._ctrl_hist_len = 0
 
     # -- adaptive control ----------------------------------------------------
     def _control_step(self) -> None:
@@ -252,31 +326,78 @@ class FleetSim:
             for p in self._ctrl_pools
         ]
         self.controller.update(
-            window_requests=self._ctrl_seen - self._ctrl_prev_seen,
+            window_requests=self._win_seen - self._win_prev_seen,
             errors=[t - s for t, s in zip(totals, self._ctrl_prev_errors)],
             queues=[p.state.queue_depth for p in self._ctrl_pools],
             instances=[p.state.num_instances for p in self._ctrl_pools],
-            t=self._ctrl_seen,
+            t=self._win_seen,
         )
         self._ctrl_prev_errors = totals
-        self._ctrl_prev_seen = self._ctrl_seen
 
-    def _ctrl_tick(self, n: int) -> None:
-        """Advance the dispatched-request counter by ``n``; fire one
-        control step once at least ``control_window`` requests have been
-        dispatched since the previous step."""
-        self._ctrl_seen += n
-        if self._ctrl_seen - self._ctrl_prev_seen >= self.control_window:
+    # -- monitoring windows (control + telemetry) -----------------------------
+    def _win_tick(self, n: int, now: float) -> None:
+        """Advance the dispatched-request counter by ``n``; close one
+        monitoring window once at least ``_win_size`` requests have been
+        dispatched since the previous boundary."""
+        self._win_seen += n
+        if self._win_seen - self._win_prev_seen >= self._win_size:
+            self._window_step(now)
+
+    def _window_step(self, now: float) -> None:
+        """One window boundary: controller first (it may move thresholds),
+        then the telemetry sample — so ``threshold.*`` records the vector
+        the *next* window's requests will actually be routed with."""
+        lo, hi = self._win_prev_seen, self._win_seen
+        if self.controller is not None:
             self._control_step()
+            if self.tracer is not None:
+                hist = self.controller.history
+                for mv in hist[self._ctrl_hist_len :]:
+                    self.tracer.emit(
+                        THRESHOLD_MOVE, now, ROUTER_TRACK, mv.boundary, mv.value
+                    )
+                self._ctrl_hist_len = len(hist)
+        if self.telemetry is not None:
+            self.telemetry.sample(t_req=hi, now=now, lo=lo, hi=hi)
+        self._win_prev_seen = self._win_seen
+
+    def _finish_windows(self, t_end: float) -> None:
+        """Final telemetry-only flush after the drain.
+
+        Captures the residual window plus the drained end state (queues
+        empty, last completions). Never fires the controller — a residue
+        smaller than a window must not move boundaries, keeping controller
+        trajectories identical to runs without telemetry."""
+        if self.telemetry is not None:
+            self.telemetry.sample(
+                t_req=self._win_seen,
+                now=t_end,
+                lo=self._win_prev_seen,
+                hi=self._win_seen,
+            )
+            self._win_prev_seen = self._win_seen
 
     # -- routing (reference path) --------------------------------------------
     def _route(self, request: Request) -> PoolSim:
         if self.router is None:
             (pool,) = self.pools.values()
+            if self.tracer is not None:
+                t = request.arrival_time
+                self.tracer.emit(ARRIVAL, t, ROUTER_TRACK, request.request_id)
+                self.tracer.emit(DISPATCH, t, 0, request.request_id)
             return pool
         # PoolState counters are maintained incrementally by the engines —
         # dispatch is O(1), no per-arrival instance sweep.
         decision = self.router.route(request)
+        if self.tracer is not None:
+            t = request.arrival_time
+            rid = request.request_id
+            self.tracer.emit(ARRIVAL, t, ROUTER_TRACK, rid)
+            self.tracer.emit(
+                DISPATCH, t, decision.pool_index, rid, decision.estimated_total
+            )
+            if decision.spilled:
+                self.tracer.emit(SPILL, t, decision.pool_index, rid)
         return self.pools[decision.pool]
 
     # -- main loop -------------------------------------------------------------
@@ -301,6 +422,14 @@ class FleetSim:
         arrivals = sorted(trace, key=lambda r: r.arrival_time)
         lookup = {r.request_id: r for r in arrivals}
         ai = 0
+        if self.telemetry is not None:
+            self.telemetry.set_trace(
+                np.asarray([r.byte_len for r in arrivals]),
+                np.asarray([r.category for r in arrivals]),
+                np.asarray([r.true_input_tokens for r in arrivals]),
+                np.asarray([r.max_output_tokens for r in arrivals]),
+            )
+        last_t = 0.0
 
         while ai < len(arrivals) or heap:
             next_arrival = arrivals[ai].arrival_time if ai < len(arrivals) else None
@@ -315,11 +444,13 @@ class FleetSim:
                 inst = pool.least_loaded()
                 if inst.submit(request, request.arrival_time):
                     wake(inst, request.arrival_time)
-                if self.controller is not None:
-                    self._ctrl_tick(1)
+                last_t = request.arrival_time
+                if self._win_size:
+                    self._win_tick(1, request.arrival_time)
                 continue
 
             now, _, inst = heapq.heappop(heap)
+            last_t = now
             t_iter, done = inst.step(now)
             # `done` feeds the router's EMA only — the records themselves
             # stay on the instance, which is the single canonical store.
@@ -337,6 +468,9 @@ class FleetSim:
         # Canonical record list: one entry per submitted request (completed
         # or rejected), collected exactly once from the instances.
         all_records = [r for p in self.pools.values() for r in p.records]
+        # Final flush at the drain end (max finish — matching the vectorized
+        # backend's notion of the run's end time exactly).
+        self._finish_windows(max((r.finish for r in all_records), default=last_t))
         spills = self.router.spill_count if self.router else 0
         per_pool = {
             name: summarize(name, p.records, total_spills=0)
@@ -350,6 +484,8 @@ class FleetSim:
             rejections=sum(p.rejections for p in self.pools.values()),
             truncations=sum(p.truncations for p in self.pools.values()),
             records=all_records,
+            telemetry=self.telemetry,
+            slo=self.slo,
         )
 
     def _dispatch_one(
@@ -357,6 +493,8 @@ class FleetSim:
         pool_ids: Optional[np.ndarray],
         budgets: Optional[np.ndarray],
         j: int,
+        t: float = 0.0,
+        rid: int = -1,
     ):
         """Pick the target pool for one arrival (vectorized backend).
 
@@ -364,12 +502,25 @@ class FleetSim:
         call; the load-dependent tail of Algorithm 1 (hard-constraint
         escalation, spillover, counters) is the router's
         :meth:`~repro.core.router.TokenBudgetRouter.route_decided`, shared
-        with the scalar dispatch path.
+        with the scalar dispatch path. ``t``/``rid`` are only passed (and
+        only used) when event tracing is on.
         """
         if self.router is None:
             (pool,) = self.pools.values()
+            if self.tracer is not None:
+                self.tracer.emit(ARRIVAL, t, ROUTER_TRACK, rid)
+                self.tracer.emit(DISPATCH, t, 0, rid)
             return pool
+        if self.tracer is None:
+            name = self.router.route_decided(int(pool_ids[j]), int(budgets[j]))
+            return self.pools[name]
+        spills0 = self.router.spill_count
         name = self.router.route_decided(int(pool_ids[j]), int(budgets[j]))
+        idx = self._pool_index[name]
+        self.tracer.emit(ARRIVAL, t, ROUTER_TRACK, rid)
+        self.tracer.emit(DISPATCH, t, idx, rid, float(budgets[j]))
+        if self.router.spill_count > spills0:
+            self.tracer.emit(SPILL, t, idx, rid)
         return self.pools[name]
 
     # -- vectorized loop -------------------------------------------------------
@@ -394,6 +545,9 @@ class FleetSim:
         out_by = cols.true_output_tokens
         cat_by = cols.category
         mot_by = cols.max_output_tokens
+        if self.telemetry is not None:
+            self.telemetry.set_trace(byte_by, cat_by, inp_by, mot_by)
+        tracer = self.tracer
 
         def feedback() -> None:
             done = [p.drain_completed_ids() for p in pools]
@@ -456,7 +610,16 @@ class FleetSim:
                 if t_sync > wake_min:
                     wake_min = sweep_all(t_sync)
                 for jj in range(j, jend):
-                    pool = self._dispatch_one(pool_ids, budgets, jj - start)
+                    if tracer is None:
+                        pool = self._dispatch_one(pool_ids, budgets, jj - start)
+                    else:
+                        pool = self._dispatch_one(
+                            pool_ids,
+                            budgets,
+                            jj - start,
+                            float(arrival[jj]),
+                            int(ids[jj]),
+                        )
                     if pool.submit_raw(
                         pool.least_loaded(),
                         int(ids[jj]),
@@ -466,12 +629,12 @@ class FleetSim:
                         float(arrival[jj]),
                     ):
                         wake_min = min(wake_min, pool.wake_min)
-                # Control windows align to coalesced rounds: the windowed
+                # Monitoring windows align to coalesced rounds: the windowed
                 # per-pool error/queue deltas are read after each round's
                 # arrivals land, mirroring the reference backend's cadence
                 # within one coalescing horizon.
-                if self.controller is not None:
-                    self._ctrl_tick(jend - j)
+                if self._win_size:
+                    self._win_tick(jend - j, float(t_sync))
                 j = jend
             # Epoch boundary: sync completed-request feedback into the EMA.
             feedback()
@@ -481,6 +644,14 @@ class FleetSim:
 
         per_pool_cols = {name: p.record_arrays() for name, p in self.pools.items()}
         fleet_cols = concat_record_columns(list(per_pool_cols.values()))
+        if self.telemetry is not None:
+            finish = fleet_cols.get("finish")
+            t_end = (
+                float(finish.max())
+                if finish is not None and len(finish)
+                else (float(arrival[-1]) if n else 0.0)
+            )
+            self._finish_windows(t_end)
         spills = router.spill_count if router else 0
         return FleetResult(
             summary=summarize_columns("fleet", fleet_cols, total_spills=spills),
@@ -492,6 +663,8 @@ class FleetSim:
             preemptions=sum(p.preemptions for p in pools),
             rejections=sum(p.rejections for p in pools),
             truncations=sum(p.truncations for p in pools),
+            telemetry=self.telemetry,
+            slo=self.slo,
         )
 
 
@@ -508,6 +681,8 @@ def run_fleet(
     coalesce_dt: Optional[float] = None,
     controller: Optional[AdaptiveController] = None,
     control_window: int = 512,
+    telemetry: Union[bool, TelemetryConfig, None] = None,
+    slo: SLOTarget = PAPER_SLO,
 ) -> FleetResult:
     """Convenience wrapper: build a FleetSim and run the trace."""
     sim = FleetSim(
@@ -521,5 +696,7 @@ def run_fleet(
         coalesce_dt=coalesce_dt,
         controller=controller,
         control_window=control_window,
+        telemetry=telemetry,
+        slo=slo,
     )
     return sim.run(trace)

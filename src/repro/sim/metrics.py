@@ -52,6 +52,29 @@ class RequestRecord:
         return (self.finish - self.first_token) / (self.output_tokens - 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """A latency service-level objective (paper §3: P99 targets).
+
+    One shared definition threaded through the fleet simulator and the
+    capacity-bisection benchmarks, replacing per-call-site hardcoded
+    targets. The defaults are the paper's: P99 TTFT ≤ 2 s, P99 TPOT ≤ 80 ms.
+    """
+
+    ttft_p99: float = 2.0  # seconds
+    tpot_p99: float = 0.080  # seconds per output token
+
+    def met_by(self, summary: "SimSummary") -> bool:
+        return (
+            summary.ttft_p99 <= self.ttft_p99
+            and summary.tpot_p99 <= self.tpot_p99
+        )
+
+
+#: The paper's SLO operating point (Tables 2–3).
+PAPER_SLO = SLOTarget()
+
+
 @dataclasses.dataclass
 class SimSummary:
     """Aggregate metrics (after warm-up discard) for one simulation run."""
@@ -86,9 +109,9 @@ class SimSummary:
             self.preemptions + self.rejected + self.truncated
         ) / self.num_requests
 
-    def meets_slo(self, ttft_p99: float = 2.0, tpot_p99: float = 0.080) -> bool:
-        """Paper SLO targets: P99 TTFT ≤ 2 s, P99 TPOT ≤ 80 ms."""
-        return self.ttft_p99 <= ttft_p99 and self.tpot_p99 <= tpot_p99
+    def meets_slo(self, slo: SLOTarget = PAPER_SLO) -> bool:
+        """Check this run against an :class:`SLOTarget` (default: paper's)."""
+        return slo.met_by(self)
 
 
 def summarize(

@@ -45,6 +45,7 @@ from repro.core.pools import (
     TOTAL_KV_BLOCKS,
 )
 from repro.core.router import Request
+from repro.obs.events import ADMIT, PREEMPT, REJECT, TRUNCATE
 from repro.sim.engine import _blocks_for  # single source for KV rounding
 from repro.sim.metrics import RequestRecord
 from repro.sim.timing import TimingModel
@@ -173,6 +174,10 @@ class VectorPoolSim:
         self._seq_counter = 0
         self._records = _ColumnStore()
         self._completed_ids: list[np.ndarray] = []
+        # Optional event tracing (repro.obs): installed by the fleet layer;
+        # None keeps the fast-path rounds free of any telemetry work.
+        self.tracer = None
+        self.pool_index = 0
 
     # -- dispatch interface (fleet layer) ------------------------------------
     @property
@@ -190,6 +195,11 @@ class VectorPoolSim:
     @property
     def busy(self) -> bool:
         return bool(np.isfinite(self.wake_min))
+
+    def kv_occupancy(self) -> float:
+        """Pool-wide KV block utilization: 1 − blocks_free / total_blocks."""
+        cap = self.total_blocks * self.num_instances
+        return 1.0 - float(self.blocks_free.sum()) / cap if cap else 0.0
 
     def least_loaded(self) -> int:
         """First instance with minimal load — same tie-break as the
@@ -220,6 +230,8 @@ class VectorPoolSim:
         rejects if the prompt alone exceeds C_max."""
         if true_input_tokens >= self.config.c_max:
             self.rejection_count += 1
+            if self.tracer is not None:
+                self.tracer.emit(REJECT, now, self.pool_index, request_id)
             self._records.add_one(
                 request_id, arrival, now, now, 0, 0, False, True,
             )
@@ -279,6 +291,8 @@ class VectorPoolSim:
                 self.load[i] -= 1
                 self.state.queue_depth -= 1
                 self.rejection_count += 1
+                if self.tracer is not None:
+                    self.tracer.emit(REJECT, now, self.pool_index, entry[_QID])
                 self._records.add_one(
                     entry[_QID], entry[_QARR], now, now, 0, 0, False, True
                 )
@@ -291,6 +305,8 @@ class VectorPoolSim:
             self.state.active += 1
             self.blocks_free[i] -= need
             self.n_active[i] += 1
+            if self.tracer is not None:
+                self.tracer.emit(ADMIT, now, self.pool_index, entry[_QID])
             slot = int(np.argmin(self.occupied[i]))  # first free slot
             self.occupied[i, slot] = True
             self.req_id[i, slot] = entry[_QID]
@@ -309,7 +325,7 @@ class VectorPoolSim:
             self._seq_counter += 1
 
     # -- preemption (exact mirror of InstanceSim._preempt_one) ---------------
-    def _preempt_one(self, i: int, alive: list[int]) -> bool:
+    def _preempt_one(self, i: int, alive: list[int], t: float = 0.0) -> bool:
         victims = [
             s
             for s in alive
@@ -328,6 +344,10 @@ class VectorPoolSim:
         self.blocks_free[i] += self.blocks[i, victim]
         self.blocks[i, victim] = 0
         self.preemption_count += 1
+        if self.tracer is not None:
+            self.tracer.emit(
+                PREEMPT, t, self.pool_index, int(self.req_id[i, victim])
+            )
         self.n_active[i] -= 1
         # Recompute mode: restart prefill over prompt + generated-so-far,
         # with the *original* output budget (reference engine semantics).
@@ -376,7 +396,7 @@ class VectorPoolSim:
                     self.blocks_free[i] -= 1
                     self.blocks[i, s] += 1
                 else:
-                    if not self._preempt_one(i, alive):
+                    if not self._preempt_one(i, alive, end):
                         break
                     if s not in alive:  # we were the victim
                         break
@@ -388,6 +408,10 @@ class VectorPoolSim:
                 self.truncated[i, s] = True
                 self.decode_remaining[i, s] = 0
                 self.truncation_count += 1
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        TRUNCATE, end, self.pool_index, int(self.req_id[i, s])
+                    )
 
             if self.decode_remaining[i, s] == 0:
                 alive.remove(s)
@@ -531,6 +555,14 @@ class VectorPoolSim:
             rem_after = np.where(trunc, 0, rem_after)
             trunc_all = self.truncated[gv] | trunc
             self.truncation_count += int(trunc.sum())
+            if self.tracer is not None and trunc.any():
+                for ri, si in zip(*np.nonzero(trunc)):
+                    self.tracer.emit(
+                        TRUNCATE,
+                        float(endv[ri]),
+                        self.pool_index,
+                        int(self.req_id[gv[ri], si]),
+                    )
 
             grow_v = np.maximum(need_end[v] - blocks_r[v], 0)
             self.blocks_free[gv] -= grow_v.sum(axis=1)

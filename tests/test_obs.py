@@ -1,0 +1,257 @@
+"""Unit tests for the ``repro.obs`` observability layer.
+
+Covers the three building blocks in isolation — the O(1) metrics registry,
+the bounded event ring, and the export validators — plus the
+:class:`~repro.sim.metrics.SLOTarget` satellite. End-to-end telemetry
+equivalence between the two DES backends lives in
+``tests/test_vector_engine.py`` (TestTelemetryEquivalence).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    ADMIT,
+    ARRIVAL,
+    CALIB_SYNC,
+    DISPATCH,
+    EVENT_NAMES,
+    PREEMPT,
+    REJECT,
+    ROUTER_TRACK,
+    EventTrace,
+    MetricsRegistry,
+    validate_chrome_trace,
+    validate_events_jsonl,
+    validate_telemetry,
+)
+from repro.sim.metrics import PAPER_SLO, SimSummary, SLOTarget
+
+
+class TestMetricsRegistry:
+    def test_counter_and_gauge_roundtrip(self):
+        reg = MetricsRegistry()
+        c = reg.counter("preemptions")
+        g = reg.gauge("queue_depth")
+        c.add()
+        c.add(3.0)
+        g.set(17.0)
+        assert c.value == 4.0
+        assert g.value == 17.0
+        assert reg.value("preemptions") == 4.0
+        assert reg.values() == {"preemptions": 4.0, "queue_depth": 17.0}
+
+    def test_duplicate_name_rejected(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(ValueError):
+            reg.gauge("x")
+
+    def test_handles_survive_slab_doubling(self):
+        """Counter/Gauge handles index into the registry, not a captured
+        array — growing the slab past its capacity must not orphan them."""
+        reg = MetricsRegistry(capacity=2)
+        first = reg.counter("m0")
+        first.add(5.0)
+        handles = [reg.counter(f"m{i}") for i in range(1, 100)]
+        for h in handles:
+            h.add(1.0)
+        first.add(1.0)  # mutates the *current* slab, not the original
+        assert first.value == 6.0
+        assert all(h.value == 1.0 for h in handles)
+
+    def test_histogram_observe_matches_observe_many(self):
+        reg = MetricsRegistry()
+        edges = (1.0, 10.0, 100.0)
+        h1 = reg.histogram("a", edges)
+        h2 = reg.histogram("b", edges)
+        values = [0.5, 1.0, 5.0, 10.0, 99.0, 100.0, 1e6]
+        for v in values:
+            h1.observe(v)
+        h2.observe_many(np.array(values))
+        assert h1.counts.tolist() == h2.counts.tolist()
+        assert h1.total == len(values)
+        # len(edges)+1 buckets: underflow of first edge … overflow of last.
+        assert len(h1.counts) == len(edges) + 1
+
+    def test_histogram_requires_increasing_edges(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.histogram("bad", (1.0, 1.0, 2.0))
+
+    def test_snapshot_includes_histograms(self):
+        reg = MetricsRegistry()
+        reg.counter("c").add(2.0)
+        reg.histogram("h", (1.0, 2.0)).observe(1.5)
+        snap = reg.snapshot()
+        assert snap["values"]["c"] == 2.0
+        assert snap["kinds"]["h"] == "histogram"
+        assert sum(snap["histograms"]["h"]["counts"]) == 1
+
+
+class TestEventTrace:
+    def test_emit_and_events_roundtrip(self):
+        tr = EventTrace(capacity=8, pool_names=("short", "long"))
+        tr.emit(ARRIVAL, 0.5, ROUTER_TRACK, 7)
+        tr.emit(DISPATCH, 0.5, 1, 7, value=4096.0)
+        tr.emit(ADMIT, 0.75, 1, 7)
+        evs = tr.events()
+        assert [e["kind"] for e in evs] == ["arrival", "dispatch", "admit"]
+        assert evs[0]["pool"] == "router"
+        assert evs[1] == {
+            "kind": "dispatch",
+            "t": 0.5,
+            "pool": "long",
+            "request_id": 7,
+            "value": 4096.0,
+        }
+
+    def test_ring_wraparound_keeps_newest(self):
+        tr = EventTrace(capacity=4, pool_names=("p",))
+        for i in range(10):
+            tr.emit(PREEMPT, float(i), 0, i)
+        assert tr.emitted == 10
+        assert tr.dropped == 6
+        assert len(tr) == 4
+        assert [e["request_id"] for e in tr.events()] == [6, 7, 8, 9]
+
+    def test_capacity_rounds_to_power_of_two(self):
+        assert EventTrace(capacity=5).capacity == 8
+        assert EventTrace(capacity=8).capacity == 8
+        with pytest.raises(ValueError):
+            EventTrace(capacity=0)
+
+    def test_jsonl_export_validates(self):
+        tr = EventTrace(capacity=16, pool_names=("short",))
+        tr.emit(REJECT, 1.0, 0, 3)
+        tr.emit(CALIB_SYNC, 2.0, ROUTER_TRACK, -1, value=12.0)
+        text = tr.to_jsonl()
+        events = validate_events_jsonl(text)
+        assert [e["kind"] for e in events] == ["reject", "calib_sync"]
+        header = json.loads(text.splitlines()[0])
+        assert header["emitted"] == 2 and header["dropped"] == 0
+
+    def test_chrome_trace_validates_and_maps_tracks(self):
+        tr = EventTrace(capacity=16, pool_names=("short", "long"))
+        tr.emit(ARRIVAL, 0.25, ROUTER_TRACK, 1)
+        tr.emit(ADMIT, 0.5, 1, 1)
+        doc = validate_chrome_trace(tr.to_chrome_trace())
+        instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+        # Router events land on the tid *after* the pool tracks; ts is µs.
+        assert [e["tid"] for e in instants] == [2, 1]
+        assert instants[0]["ts"] == pytest.approx(0.25e6)
+        thread_names = {
+            e["tid"]: e["args"]["name"]
+            for e in doc["traceEvents"]
+            if e.get("name") == "thread_name"
+        }
+        assert thread_names == {0: "short", 1: "long", 2: "router"}
+
+    def test_event_names_cover_all_kinds(self):
+        assert len(EVENT_NAMES) == 9
+        assert len(set(EVENT_NAMES)) == 9
+
+
+class TestValidators:
+    def _telemetry_doc(self):
+        pools = ["short"]
+        cols = {name: [0.0, 1.0] for name in ("t_req", "t_sim", "spills")}
+        for fam in (
+            "queue_depth",
+            "active",
+            "slot_frac",
+            "kv_frac",
+            "preemptions",
+            "rejections",
+            "truncations",
+        ):
+            cols[f"{fam}.short"] = [0.0, 0.0]
+        return {
+            "schema": "repro.obs/telemetry-v1",
+            "pools": pools,
+            "num_samples": 2,
+            "columns": cols,
+        }
+
+    def test_telemetry_doc_accepted(self):
+        assert validate_telemetry(self._telemetry_doc())
+
+    def test_telemetry_rejects_bad_schema(self):
+        doc = self._telemetry_doc()
+        doc["schema"] = "nope"
+        with pytest.raises(ValueError, match="schema"):
+            validate_telemetry(doc)
+
+    def test_telemetry_rejects_ragged_columns(self):
+        doc = self._telemetry_doc()
+        doc["columns"]["t_sim"] = [0.0]
+        with pytest.raises(ValueError, match="t_sim"):
+            validate_telemetry(doc)
+
+    def test_telemetry_rejects_missing_pool_column(self):
+        doc = self._telemetry_doc()
+        del doc["columns"]["kv_frac.short"]
+        with pytest.raises(ValueError, match="kv_frac"):
+            validate_telemetry(doc)
+
+    def test_telemetry_rejects_nonmonotonic_t_req(self):
+        doc = self._telemetry_doc()
+        doc["columns"]["t_req"] = [1.0, 0.0]
+        with pytest.raises(ValueError, match="non-decreasing"):
+            validate_telemetry(doc)
+
+    def test_events_jsonl_rejects_unknown_kind(self):
+        tr = EventTrace(capacity=4, pool_names=("p",))
+        tr.emit(ADMIT, 1.0, 0, 1)
+        lines = tr.to_jsonl().splitlines()
+        bad = json.loads(lines[1])
+        bad["kind"] = "meltdown"
+        with pytest.raises(ValueError, match="kind"):
+            validate_events_jsonl("\n".join([lines[0], json.dumps(bad)]))
+
+    def test_chrome_trace_rejects_unnamed_track(self):
+        tr = EventTrace(capacity=4, pool_names=("p",))
+        tr.emit(ADMIT, 1.0, 0, 1)
+        doc = json.loads(tr.to_chrome_trace())
+        for e in doc["traceEvents"]:
+            if e["ph"] == "i":
+                e["tid"] = 99
+        with pytest.raises(ValueError, match="unnamed track"):
+            validate_chrome_trace(json.dumps(doc))
+
+
+class TestSLOTarget:
+    def _summary(self, ttft_p99, tpot_p99):
+        return SimSummary(
+            name="t",
+            num_requests=100,
+            completed=100,
+            rejected=0,
+            truncated=0,
+            preemptions=0,
+            spills=0,
+            ttft_p50=0.1,
+            ttft_p99=ttft_p99,
+            tpot_p50=0.01,
+            tpot_p99=tpot_p99,
+            makespan=10.0,
+            throughput=10.0,
+        )
+
+    def test_paper_defaults(self):
+        assert PAPER_SLO.ttft_p99 == 2.0
+        assert PAPER_SLO.tpot_p99 == 0.080
+
+    def test_met_at_exact_boundary(self):
+        assert self._summary(2.0, 0.080).meets_slo()
+
+    def test_each_axis_gates_independently(self):
+        assert not self._summary(2.1, 0.01).meets_slo()
+        assert not self._summary(0.1, 0.081).meets_slo()
+
+    def test_custom_target_threads_through(self):
+        s = self._summary(4.0, 0.1)
+        assert not s.meets_slo()
+        assert s.meets_slo(SLOTarget(ttft_p99=5.0, tpot_p99=0.2))

@@ -197,3 +197,119 @@ class TestFleet:
             )
             plan = plan_fleet(trace, reqs, A100_LLAMA3_70B, 1000.0)
             assert plan.savings == pytest.approx(expected, abs=0.01)
+
+
+class TestSummarizeParity:
+    """``summarize`` (record objects) and ``summarize_columns`` (arrays)
+    must agree on degenerate inputs, where warm-up cuts, empty percentile
+    sets, and zero makespans are easiest to get wrong in one path only."""
+
+    @staticmethod
+    def _to_columns(records):
+        import numpy as np
+
+        return {
+            "request_id": np.array([r.request_id for r in records], dtype=np.int64),
+            "arrival": np.array([r.arrival for r in records]),
+            "first_token": np.array([r.first_token for r in records]),
+            "finish": np.array([r.finish for r in records]),
+            "output_tokens": np.array(
+                [r.output_tokens for r in records], dtype=np.int64
+            ),
+            "preemptions": np.array(
+                [r.preemptions for r in records], dtype=np.int64
+            ),
+            "truncated": np.array([r.truncated for r in records], dtype=bool),
+            "rejected": np.array([r.rejected for r in records], dtype=bool),
+        }
+
+    def _assert_parity(self, records, **kw):
+        from repro.sim.metrics import summarize, summarize_columns
+
+        a = summarize("x", records, **kw)
+        b = summarize_columns("x", self._to_columns(records), **kw)
+        assert a == b
+
+    def test_empty_trace(self):
+        self._assert_parity([])
+
+    def test_all_rejected(self):
+        from repro.sim.metrics import RequestRecord
+
+        records = [
+            RequestRecord(
+                request_id=i,
+                pool="p",
+                arrival=float(i),
+                first_token=float(i),
+                finish=float(i),
+                output_tokens=0,
+                rejected=True,
+            )
+            for i in range(10)
+        ]
+        self._assert_parity(records)
+        from repro.sim.metrics import summarize
+
+        s = summarize("x", records)
+        assert s.completed == 0 and s.rejected == 8  # post 20% warm-up cut
+        assert s.makespan == 0.0 and s.throughput == 0.0
+
+    def test_all_truncated(self):
+        from repro.sim.metrics import RequestRecord
+
+        records = [
+            RequestRecord(
+                request_id=i,
+                pool="p",
+                arrival=float(i),
+                first_token=float(i) + 0.5,
+                finish=float(i) + 1.0,
+                output_tokens=1,  # truncated after the first token: no TPOT
+                truncated=True,
+            )
+            for i in range(10)
+        ]
+        self._assert_parity(records)
+        from repro.sim.metrics import summarize
+
+        s = summarize("x", records)
+        assert s.truncated == s.completed == 8
+        assert s.tpot_p50 == s.tpot_p99 == 0.0  # no multi-token requests
+        assert s.ttft_p50 == 0.5
+
+    def test_single_record(self):
+        from repro.sim.metrics import RequestRecord
+
+        self._assert_parity(
+            [
+                RequestRecord(
+                    request_id=0,
+                    pool="p",
+                    arrival=0.0,
+                    first_token=0.25,
+                    finish=1.0,
+                    output_tokens=4,
+                )
+            ]
+        )
+
+    def test_mixed_with_spills_and_warmup(self):
+        from repro.sim.metrics import RequestRecord
+
+        records = [
+            RequestRecord(
+                request_id=i,
+                pool="p",
+                arrival=float(i),
+                first_token=float(i) + 0.1 * (i + 1),
+                finish=float(i) + 1.0 + 0.05 * i,
+                output_tokens=i % 5,
+                preemptions=i % 3,
+                truncated=(i % 4 == 0),
+                rejected=(i % 7 == 0),
+            )
+            for i in range(23)
+        ]
+        self._assert_parity(records, warmup_frac=0.20, total_spills=6)
+        self._assert_parity(records, warmup_frac=0.0, total_spills=0)

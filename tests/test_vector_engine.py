@@ -397,3 +397,240 @@ class TestIncrementalPoolState:
                 break
             t += DYADIC.iter_time(1)
         assert pool.preemptions > 0  # the run exercised preemption paths
+
+
+def _sorted_events(telemetry):
+    """Time-sorted event multiset — the cross-backend comparison key.
+
+    Within one coalesced round the two backends walk instances in different
+    orders (heap order vs row order), so raw emission order differs while
+    the event *set* is identical; sorting by (t, kind, request_id, pool,
+    value) makes the comparison order-insensitive without losing anything.
+    """
+    tr = telemetry.events
+    idx = tr._order()
+    return sorted(
+        zip(
+            tr.t[idx].tolist(),
+            tr.kind[idx].tolist(),
+            tr.request_id[idx].tolist(),
+            tr.pool[idx].tolist(),
+            tr.value[idx].tolist(),
+        )
+    )
+
+
+class TestTelemetryEquivalence:
+    """The observability layer inherits the backend-equivalence contract:
+    exact-class runs (single pool, dyadic timing, ``coalesce_dt=0``) must
+    produce *identical* telemetry columns and event multisets from both
+    engines; routed fleets compare structurally (same windows, deltas that
+    reconcile with the run counters) since routing itself is only
+    tolerance-equivalent. Installing telemetry must never perturb the
+    simulation."""
+
+    WINDOW = 100
+
+    def _run_single(self, trace, backend, telemetry):
+        from repro.obs import TelemetryConfig
+
+        cfg = PoolConfig("p", 4096, 16)
+        sim = FleetSim(
+            {"p": (cfg, 4)},
+            DYADIC,
+            backend=backend,
+            coalesce_dt=0.0,
+            telemetry=telemetry,
+            control_window=self.WINDOW,
+        )
+        return sim.run(trace)
+
+    @pytest.fixture(scope="class")
+    def exact(self):
+        from repro.obs import TelemetryConfig
+
+        trace = poisson_trace(1500, rate=250.0, seed=11)
+        tel = TelemetryConfig(window=self.WINDOW, events=True)
+        ref = self._run_single(trace, "reference", tel)
+        vec = self._run_single(trace, "vectorized", tel)
+        return ref, vec
+
+    def test_exact_class_columns_identical(self, exact):
+        ref, vec = exact
+        assert ref.telemetry.num_samples == vec.telemetry.num_samples > 0
+        assert set(ref.telemetry.columns) == set(vec.telemetry.columns)
+        for name in ref.telemetry.columns:
+            assert np.array_equal(
+                ref.telemetry.column(name),
+                vec.telemetry.column(name),
+                equal_nan=True,
+            ), name
+
+    def test_exact_class_event_multisets_identical(self, exact):
+        ref, vec = exact
+        a = _sorted_events(ref.telemetry)
+        b = _sorted_events(vec.telemetry)
+        assert len(a) == len(b) > 0
+        assert a == b
+
+    def test_telemetry_off_is_bit_identical(self):
+        trace = poisson_trace(800, rate=250.0, seed=17)
+        from repro.obs import TelemetryConfig
+
+        for backend in ("reference", "vectorized"):
+            plain = self._run_single(trace, backend, None)
+            tele = self._run_single(
+                trace, backend, TelemetryConfig(window=self.WINDOW, events=True)
+            )
+            for f in SUMMARY_FIELDS:
+                assert getattr(plain.summary, f) == getattr(tele.summary, f), (
+                    backend,
+                    f,
+                )
+            assert plain.telemetry is None
+            assert tele.telemetry is not None
+
+    @pytest.fixture(scope="class", params=["two_pool", "three_pool"])
+    def routed(self, request):
+        from repro.obs import TelemetryConfig
+
+        n, rate = 3000, 300.0
+        trace = generate_trace(
+            TraceSpec(trace="azure", num_requests=n, rate=rate, seed=42)
+        )
+        if request.param == "two_pool":
+            plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
+            pools = {
+                "short": (
+                    PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
+                    plan.short.instances,
+                ),
+                "long": (
+                    PoolConfig("long", 65_536, 16, headroom=1.02),
+                    plan.long.instances,
+                ),
+            }
+            thresholds = None
+        else:
+            pools, thresholds = three_pool_topology(trace, rate)
+        tel = TelemetryConfig(window=self.WINDOW, events=True)
+        out = {}
+        for backend in ("reference", "vectorized"):
+            out[backend] = run_fleet(
+                trace,
+                pools,
+                A100_LLAMA3_70B,
+                backend=backend,
+                thresholds=thresholds,
+                telemetry=tel,
+            )
+        return out
+
+    def test_routed_windows_align(self, routed):
+        """Windows are counted in dispatched requests on both backends; the
+        vectorized engine may overshoot a boundary by at most one dispatch
+        chunk (documented in ``repro.obs``), so sample counts agree within
+        the merge slack while the request axis itself is identical: both
+        series are non-decreasing and end at the full dispatched count."""
+        ref, vec = routed["reference"], routed["vectorized"]
+        assert ref.telemetry.pool_names == vec.telemetry.pool_names
+        for tel in (ref.telemetry, vec.telemetry):
+            assert tel.num_samples > 0
+            t_req = tel.column("t_req")
+            assert np.all(np.diff(t_req) >= 0)
+        assert (
+            ref.telemetry.column("t_req")[-1]
+            == vec.telemetry.column("t_req")[-1]
+        )
+        assert abs(ref.telemetry.num_samples - vec.telemetry.num_samples) <= 2
+
+    def test_routed_deltas_reconcile_with_counters(self, routed):
+        """Per-window deltas must sum to the run's end-of-run counters on
+        each backend independently — no events lost between windows."""
+        for backend, res in routed.items():
+            tel = res.telemetry
+            for fam, total in (
+                ("preemptions", res.preemptions),
+                ("rejections", res.rejections),
+                ("truncations", res.truncations),
+            ):
+                sampled = sum(
+                    tel.column(f"{fam}.{p}").sum() for p in tel.pool_names
+                )
+                assert sampled == total, (backend, fam)
+            assert tel.column("spills").sum() == res.summary.spills, backend
+
+    def test_routed_series_close(self, routed):
+        """Cross-backend: the sampled error mass agrees within the routed
+        tolerance (routing staleness shifts individual windows)."""
+        ref, vec = routed["reference"], routed["vectorized"]
+        for fam in ("preemptions", "truncations"):
+            a = sum(
+                ref.telemetry.column(f"{fam}.{p}").sum()
+                for p in ref.telemetry.pool_names
+            )
+            b = sum(
+                vec.telemetry.column(f"{fam}.{p}").sum()
+                for p in vec.telemetry.pool_names
+            )
+            assert b == pytest.approx(a, rel=0.25, abs=20), fam
+
+    def test_routed_exports_validate(self, routed):
+        from repro.obs import (
+            validate_chrome_trace,
+            validate_events_jsonl,
+            validate_telemetry,
+        )
+
+        for res in routed.values():
+            validate_telemetry(res.telemetry.to_json())
+            validate_events_jsonl(res.telemetry.events.to_jsonl())
+            validate_chrome_trace(res.telemetry.events.to_chrome_trace())
+
+    def test_threshold_column_tracks_controller(self):
+        """The sampled ``threshold.0`` series replays the controller's
+        move history exactly (post-move vector at each window)."""
+        from repro.core.adaptive import AdaptiveController
+        from repro.obs import TelemetryConfig
+
+        n, rate = 2500, 250.0
+        cols = generate_trace_columns(
+            TraceSpec(trace="azure", num_requests=n, rate=rate, seed=42)
+        )
+        plan = plan_fleet("azure", cols.to_requests(), A100_LLAMA3_70B, rate)
+        pools = {
+            "short": (
+                PoolConfig(
+                    "short", 8192, n_seq_for_cmax(8192),
+                    headroom=1.05, queue_limit=64,
+                ),
+                max(1, int(plan.short.instances * 0.6)),
+            ),
+            "long": (
+                PoolConfig("long", 65_536, 16, headroom=1.02, queue_limit=64),
+                plan.long.instances,
+            ),
+        }
+        ctrl = AdaptiveController(b_min=512)
+        sim = FleetSim(
+            dict(pools), A100_LLAMA3_70B, b_short=8192, backend="vectorized",
+            controller=ctrl, control_window=200,
+            telemetry=TelemetryConfig(window=200, events=True),
+        )
+        res = sim.run(cols)
+        assert ctrl.history  # the incident actually fired the controller
+        tel = res.telemetry
+        t_req = tel.column("t_req")
+        th = tel.column("threshold.0")
+        # replay: threshold at window [.., hi) is the vector after every
+        # move with boundary index <= hi
+        moves = {m.t: m.value for m in ctrl.history}
+        expect, cur = [], 8192
+        for hi in t_req:
+            cur = moves.get(int(hi), cur)
+            expect.append(cur)
+        assert th.tolist() == expect
+        # every move also landed in the event trace on the router track
+        ev = [e for e in tel.events.events() if e["kind"] == "threshold_move"]
+        assert len(ev) == len(ctrl.history)
+        assert all(e["pool"] == "router" for e in ev)
