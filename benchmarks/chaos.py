@@ -1,0 +1,349 @@
+"""Chaos benchmark: the paper's fault-isolation claim under *actual* faults.
+
+§4.3 argues pool isolation gives graceful degradation — pressure on the
+long pool never touches the short pool's latency. Earlier benchmarks only
+created *pressure* (surges); this one *breaks things*, driving the
+:mod:`repro.sim.faults` subsystem end to end through the vectorized
+backend, static-vs-adaptive:
+
+* ``crash_surge`` — a long-request surge (the §4.3 long-tail burst from
+  ``benchmarks/reliability.py``) and, in the middle of it, a hard crash
+  of a long-pool instance with its in-flight work lost. Retries
+  re-route with backoff; the measurement is the paper's isolation claim
+  under a *real* incident: the short pool holds its TTFT SLO while the
+  long pool absorbs the crash.
+* ``rolling_restart`` — every instance of both pools restarted in
+  sequence (in-flight work re-queued, post-restart warm-up at degraded
+  speed), the standard deploy-time reliability drill.
+* ``straggler`` — one instance per pool runs 3× slow for the middle
+  third of the run (the classic gray failure: alive, admitting, slow).
+
+Each scenario validates its telemetry-v2 / events-v1 exports in-line, so
+running this in CI is also an export-schema smoke. ``--determinism-check``
+replays a seeded stochastic schedule twice and demands identical
+counters; ``--check-isolation`` turns the crash_surge isolation claim
+into a hard exit code for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import Optional
+
+from benchmarks.common import emit, write_json
+from benchmarks.reliability import long_surge_columns
+from repro.core.adaptive import AdaptiveController
+from repro.core.pools import PoolConfig, n_seq_for_cmax
+from repro.obs import TelemetryConfig, validate_events_jsonl, validate_telemetry
+from repro.sim import (
+    A100_LLAMA3_70B,
+    PAPER_SLO,
+    FaultInjector,
+    FaultSpec,
+    FleetSim,
+    RetryPolicy,
+    plan_fleet,
+)
+from repro.traces import TraceSpec, generate_trace_columns
+
+#: Valid scenario names, in run order.
+SCENARIO_NAMES = ("crash_surge", "rolling_restart", "straggler")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One fault scenario: a trace spec plus the fault schedule builder."""
+
+    name: str
+    spec: TraceSpec
+    #: (pools: name → instances, duration) → FaultInjector
+    faults: object
+    retry: Optional[RetryPolicy] = None
+    #: inject the §4.3 long-request burst into the [40%, 60%] window
+    long_surge: bool = False
+
+
+def _crash_surge_faults(pools: dict[str, int], duration: float) -> FaultInjector:
+    """One long-pool instance dies mid-surge, in-flight work lost."""
+    return FaultInjector(
+        (
+            FaultSpec(
+                "crash",
+                "long",
+                instance=0,
+                t=0.45 * duration,
+                duration=0.20 * duration,
+                requeue=False,
+                warmup=0.05 * duration,
+                warmup_factor=1.5,
+            ),
+        )
+    )
+
+
+def _rolling_restart_faults(pools: dict[str, int], duration: float) -> FaultInjector:
+    """Restart every instance of every pool in sequence, re-queueing work."""
+    specs = []
+    slots = sum(pools.values())
+    window = 0.8 * duration / max(1, slots)
+    t = 0.1 * duration
+    for name, count in pools.items():
+        for inst in range(count):
+            specs.append(
+                FaultSpec(
+                    "crash",
+                    name,
+                    instance=inst,
+                    t=t,
+                    duration=0.5 * window,
+                    requeue=True,
+                    warmup=0.25 * window,
+                    warmup_factor=2.0,
+                )
+            )
+            t += window
+    return FaultInjector(specs)
+
+
+def _straggler_faults(pools: dict[str, int], duration: float) -> FaultInjector:
+    """Gray failure: one instance per pool at 3× iteration time mid-run."""
+    return FaultInjector(
+        tuple(
+            FaultSpec(
+                "slowdown",
+                name,
+                instance=0,
+                t=0.33 * duration,
+                duration=0.33 * duration,
+                factor=3.0,
+            )
+            for name in pools
+        )
+    )
+
+
+def scenarios(num_requests: int, rate: float, seed: int) -> list[Scenario]:
+    duration = num_requests / rate  # nominal trace length, s
+    base = TraceSpec(trace="azure", num_requests=num_requests, rate=rate, seed=seed)
+    retry = RetryPolicy(
+        max_retries=3,
+        base_backoff=0.005 * duration,
+        max_backoff=0.05 * duration,
+        jitter=0.25,
+        seed=seed,
+    )
+    return [
+        Scenario(
+            "crash_surge", base, _crash_surge_faults, retry=retry, long_surge=True
+        ),
+        Scenario("rolling_restart", base, _rolling_restart_faults, retry=retry),
+        Scenario("straggler", base, _straggler_faults),
+    ]
+
+
+def build_pools(trace_cols, rate: float) -> dict[str, tuple[PoolConfig, int]]:
+    """The paper's short/long pair, analytically sized for the base rate."""
+    plan = plan_fleet("azure", trace_cols.to_requests(), A100_LLAMA3_70B, rate)
+    short_cfg = PoolConfig(
+        "short", 8192, n_seq_for_cmax(8192), batch_token_budget=16_384,
+        headroom=1.05, queue_limit=64,
+    )
+    long_cfg = PoolConfig("long", 65_536, 16, headroom=1.02, queue_limit=64)
+    return {
+        "short": (short_cfg, plan.short.instances),
+        "long": (long_cfg, plan.long.instances),
+    }
+
+
+def run_scenario(
+    sc: Scenario,
+    *,
+    backend: str = "vectorized",
+    control_window: int = 200,
+) -> dict:
+    cols = generate_trace_columns(sc.spec)
+    pools = build_pools(cols, sc.spec.rate)  # sized for the NOMINAL trace
+    if sc.long_surge:
+        cols = long_surge_columns(cols, seed=sc.spec.seed)
+    duration = float(cols.arrival_time[-1])
+    injector = sc.faults({name: n for name, (_, n) in pools.items()}, duration)
+
+    out = {}
+    for label in ("static", "adaptive"):
+        controller: Optional[AdaptiveController] = (
+            AdaptiveController(b_min=512) if label == "adaptive" else None
+        )
+        sim = FleetSim(
+            dict(pools),
+            A100_LLAMA3_70B,
+            b_short=8192,
+            backend=backend,
+            controller=controller,
+            control_window=control_window,
+            telemetry=TelemetryConfig(window=control_window, events=True),
+            injector=injector,
+            retry_policy=sc.retry,
+        )
+        t0 = time.perf_counter()
+        res = sim.run(cols)
+        wall = (time.perf_counter() - t0) * 1e6
+        # every chaos run doubles as an export-schema smoke
+        doc = validate_telemetry(res.telemetry.to_dict())
+        assert doc["schema"] == "repro.obs/telemetry-v2", doc["schema"]
+        validate_events_jsonl(res.telemetry.events.to_jsonl())
+        s = res.summary
+        short, long_ = res.per_pool["short"], res.per_pool["long"]
+        emit(
+            f"chaos/{sc.name}/{label}",
+            wall,
+            f"short_ttft_p99={short.ttft_p99:.3f};"
+            f"long_ttft_p99={long_.ttft_p99:.3f};"
+            f"goodput={res.goodput():.1f};avail={res.availability:.4f};"
+            f"retries={res.retries};timeouts={res.timeouts};shed={res.shed};"
+            f"fails={res.instance_failures};success={s.success_rate:.4f}",
+        )
+        out[label] = res
+    return out
+
+
+def run_scenarios(
+    num_requests: int,
+    rate: float,
+    seed: int,
+    *,
+    backend: str = "vectorized",
+    only: Optional[list[str]] = None,
+) -> dict:
+    names = list(only) if only else list(SCENARIO_NAMES)
+    unknown = sorted(set(names) - set(SCENARIO_NAMES))
+    if unknown:
+        raise ValueError(
+            f"unknown scenarios {unknown}; expected a subset of {SCENARIO_NAMES}"
+        )
+    return {
+        sc.name: run_scenario(sc, backend=backend)
+        for sc in scenarios(num_requests, rate, seed)
+        if sc.name in names
+    }
+
+
+def check_isolation(results: dict) -> None:
+    """The §4.3 claim as a hard assertion: under crash-during-surge the
+    short pool holds its TTFT SLO while the long pool absorbs the hit."""
+    res = results["crash_surge"]["static"]
+    short = res.per_pool["short"]
+    if res.instance_failures == 0:
+        raise AssertionError("crash_surge injected no faults — scenario broken")
+    if short.ttft_p99 > PAPER_SLO.ttft_p99:
+        raise AssertionError(
+            f"short pool lost its TTFT SLO under crash_surge: "
+            f"p99={short.ttft_p99:.3f}s > {PAPER_SLO.ttft_p99}s"
+        )
+    emit(
+        "chaos/crash_surge/isolation",
+        0.0,
+        f"short_ttft_p99={short.ttft_p99:.3f};slo={PAPER_SLO.ttft_p99};held=1",
+    )
+
+
+def check_determinism(num_requests: int, rate: float, seed: int, *, backend: str) -> None:
+    """Same seeded stochastic fault schedule twice → identical counters."""
+    spec = TraceSpec(trace="azure", num_requests=num_requests, rate=rate, seed=seed)
+    cols = generate_trace_columns(spec)
+    pools = build_pools(cols, rate)
+    duration = float(cols.arrival_time[-1])
+    retry = RetryPolicy(max_retries=3, base_backoff=0.01, max_backoff=0.1, seed=seed)
+
+    def one():
+        injector = FaultInjector.stochastic(
+            {name: n for name, (_, n) in pools.items()},
+            horizon=duration,
+            rate=2.0 / duration,
+            seed=seed,
+            requeue=True,
+        )
+        res = FleetSim(
+            dict(pools),
+            A100_LLAMA3_70B,
+            b_short=8192,
+            backend=backend,
+            injector=injector,
+            retry_policy=retry,
+        ).run(cols)
+        return (
+            res.summary.completed,
+            res.summary.rejected,
+            res.summary.truncated,
+            res.retries,
+            res.timeouts,
+            res.shed,
+            res.instance_failures,
+            res.availability,
+            res.summary.ttft_p99,
+            res.summary.makespan,
+        )
+
+    a, b = one(), one()
+    if a != b:
+        raise AssertionError(f"seeded fault replay diverged:\n  {a}\n  {b}")
+    emit("chaos/determinism", 0.0, f"fails={a[6]};retries={a[3]};identical=1")
+
+
+def run(
+    scale: float = 0.2,
+    seed: int = 42,
+    *,
+    backend: str = "vectorized",
+    only: Optional[list[str]] = None,
+) -> dict:
+    return run_scenarios(
+        int(10_000 * scale), 1000.0 * scale, seed, backend=backend, only=only
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrival rate (default: requests/10 → 10 s trace)")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--backend", default="vectorized",
+                    choices=("reference", "vectorized"))
+    ap.add_argument("--scenarios", nargs="+", default=None,
+                    choices=SCENARIO_NAMES,
+                    help="subset of scenarios to run (default: all)")
+    ap.add_argument("--check-isolation", action="store_true",
+                    help="assert the short pool holds its TTFT SLO in crash_surge")
+    ap.add_argument("--determinism-check", action="store_true",
+                    help="replay a seeded stochastic schedule twice, demand "
+                         "identical FleetResult counters")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as a JSON artifact")
+    args = ap.parse_args()
+    rate = args.rate if args.rate is not None else args.requests / 10.0
+
+    names = list(args.scenarios) if args.scenarios else list(SCENARIO_NAMES)
+    if args.check_isolation and "crash_surge" not in names:
+        ap.error("--check-isolation requires the crash_surge scenario")
+    try:
+        results = run_scenarios(
+            args.requests, rate, args.seed, backend=args.backend, only=names
+        )
+        if args.check_isolation:
+            check_isolation(results)
+        if args.determinism_check:
+            check_determinism(args.requests, rate, args.seed, backend=args.backend)
+    except AssertionError as e:
+        print(f"chaos: FAILED: {e}", file=sys.stderr)
+        if args.json:
+            write_json(args.json, extra={"failed": str(e)})
+        raise SystemExit(1)
+    if args.json:
+        write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

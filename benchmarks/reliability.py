@@ -1,7 +1,9 @@
 """§4.3 reliability: zero preemptions at designed sizes; fault isolation
 under a long-request surge.
 
-Two experiments:
+Two experiments, both through the columnar trace pipeline
+(:func:`~repro.traces.generate_trace_columns`) and the vectorized DES
+backend:
 
 1. **designed** — Table-2-sized fleets on the nominal trace → expect 0
    preemptions, 0 rejections, 100% success on both configurations.
@@ -11,51 +13,66 @@ Two experiments:
    everyone's tail latency; with token-budget routing only the long pool
    queues — the short pool (>90% of traffic) keeps its TTFT. This is the
    paper's "graceful degradation / fault isolation" claim, measured.
+
+``benchmarks/chaos.py`` reuses :func:`long_surge_columns` to combine the
+same surge with *actual* instance faults.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 
-from benchmarks.common import emit
+import numpy as np
+
+from benchmarks.common import emit, write_json
 from repro.core.pools import PoolConfig, n_seq_for_cmax
-from repro.core.router import Request
 from repro.sim import A100_LLAMA3_70B, plan_fleet, run_fleet
-from repro.traces import TraceSpec, generate_trace
+from repro.traces import TraceSpec, generate_trace_columns
+from repro.traces.generator import TraceColumns
 
 
-def _with_long_surge(reqs, *, factor: float = 1.5, seed: int = 7):
-    """Clone a fraction of long requests into a mid-trace burst window."""
-    import numpy as np
+def long_surge_columns(
+    cols: TraceColumns, *, factor: float = 1.5, seed: int = 7
+) -> TraceColumns:
+    """Clone a fraction of long requests into a mid-trace burst window.
 
+    Columnar equivalent of the old per-request ``dataclasses.replace``
+    loop: sample ``factor ×`` the >8192-token rows with replacement, give
+    them fresh ids and uniform arrivals in the [40%, 60%] window, and
+    re-sort by arrival.
+    """
     rng = np.random.default_rng(seed)
-    t_lo = reqs[int(len(reqs) * 0.4)].arrival_time
-    t_hi = reqs[int(len(reqs) * 0.6)].arrival_time
-    long_reqs = [r for r in reqs if r.true_total > 8192]
-    n_extra = int(len(long_reqs) * factor)
-    extra = []
-    base_id = max(r.request_id for r in reqs) + 1
-    for i in range(n_extra):
-        src = long_reqs[int(rng.integers(0, len(long_reqs)))]
-        extra.append(
-            dataclasses.replace(
-                src,
-                request_id=base_id + i,
-                arrival_time=float(rng.uniform(t_lo, t_hi)),
+    t_lo = float(cols.arrival_time[int(len(cols) * 0.4)])
+    t_hi = float(cols.arrival_time[int(len(cols) * 0.6)])
+    long_idx = np.flatnonzero(cols.true_total > 8192)
+    n_extra = int(len(long_idx) * factor)
+    src = long_idx[rng.integers(0, len(long_idx), n_extra)]
+    base_id = int(cols.request_id.max()) + 1
+    extra = {
+        "request_id": np.arange(base_id, base_id + n_extra, dtype=np.int64),
+        "arrival_time": rng.uniform(t_lo, t_hi, n_extra),
+    }
+    merged = TraceColumns(
+        **{
+            f.name: np.concatenate(
+                [getattr(cols, f.name), extra.get(f.name, getattr(cols, f.name)[src])]
             )
-        )
-    return sorted(reqs + extra, key=lambda r: r.arrival_time)
+            for f in dataclasses.fields(TraceColumns)
+        }
+    )
+    return merged.sorted_by_arrival()
 
 
-def run(scale: float = 0.2, seed: int = 42) -> dict:
+def run(scale: float = 0.2, seed: int = 42, *, backend: str = "vectorized") -> dict:
     rate = 1000.0 * scale
-    reqs = generate_trace(
+    cols = generate_trace_columns(
         TraceSpec(
             trace="azure", num_requests=int(10_000 * scale), rate=rate, seed=seed
         )
     )
-    plan = plan_fleet("azure", reqs, A100_LLAMA3_70B, rate)
+    plan = plan_fleet("azure", cols.to_requests(), A100_LLAMA3_70B, rate)
     homo_cfg = PoolConfig("homogeneous", 65_536, 16, headroom=1.08)
     short_cfg = PoolConfig(
         "short", 8192, n_seq_for_cmax(8192), batch_token_budget=16_384,
@@ -70,12 +87,12 @@ def run(scale: float = 0.2, seed: int = 42) -> dict:
 
     out = {}
     for label, trace in (
-        ("designed", reqs),
-        ("long_surge", _with_long_surge(reqs)),
+        ("designed", cols),
+        ("long_surge", long_surge_columns(cols)),
     ):
         t0 = time.perf_counter()
-        res_h = run_fleet(trace, homo_pools, A100_LLAMA3_70B)
-        res_d = run_fleet(trace, dual_pools, A100_LLAMA3_70B)
+        res_h = run_fleet(trace, homo_pools, A100_LLAMA3_70B, backend=backend)
+        res_d = run_fleet(trace, dual_pools, A100_LLAMA3_70B, backend=backend)
         wall = (time.perf_counter() - t0) * 1e6
         short_stats = res_d.per_pool["short"]
         emit(
@@ -98,5 +115,19 @@ def run(scale: float = 0.2, seed: int = 42) -> dict:
     return out
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--backend", default="vectorized",
+                    choices=("reference", "vectorized"))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as a JSON artifact")
+    args = ap.parse_args()
+    run(args.scale, args.seed, backend=args.backend)
+    if args.json:
+        write_json(args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -15,6 +15,7 @@ Modules:
   fig6_sensitivity    — Fig. 6 threshold sweep
   cost_model_gap      — §4.2 Eq. 7 vs Eq. 8 vs realized
   reliability         — §4.3 preemptions/rejections + fault isolation
+  chaos               — §4.3 isolation under injected instance faults
   dispatch_overhead   — §2.2 O(1) sub-microsecond dispatch
   roofline            — §Roofline table from dry-run records
   sim_throughput      — reference vs vectorized DES backend speedup
@@ -47,6 +48,7 @@ def main() -> None:
         beyond_paper_adaptive,
         beyond_paper_int8kv,
         beyond_paper_threepool,
+        chaos,
         cost_model_gap,
         dispatch_overhead,
         fig6_sensitivity,
@@ -71,6 +73,7 @@ def main() -> None:
         fig6_sensitivity,
         cost_model_gap,
         reliability,
+        chaos,
         dispatch_overhead,
         beyond_paper_int8kv,
         beyond_paper_threepool,

@@ -136,12 +136,18 @@ class TokenBudgetRouter:
         self.pools.set_threshold(0, value)
 
     # -- dispatch (Algorithm 1 lines 1–14) ----------------------------------
-    def route(self, request: Request) -> RouteDecision:
+    def route(
+        self, request: Request, blocked: Optional[frozenset] = None
+    ) -> RouteDecision:
         # Eq. 3/5 estimate — inlined EmaCalibrator.estimate_total_budget
         # with one ratio lookup serving both terms — then the threshold
         # search. B_k ≤ C_max,k guarantees the static target admits the
         # budget, so the escalation loop lives only in the batched-decision
         # replay (route_decided) and the spill tail.
+        #
+        # ``blocked`` (fault injection: tripped circuit breakers / all-down
+        # pools) forces the load-dependent tail so an unhealthy target is
+        # evacuated by nearest-feasible spillover.
         c_star = self.calibrator.conservative_ratio(request.category)
         l_total = (
             math.ceil(request.byte_len / c_star) + request.max_output_tokens
@@ -151,28 +157,39 @@ class TokenBudgetRouter:
         state = self._states[idx]
         # Inlined PoolState.overloaded (property calls cost ~15% of the
         # dispatch budget); _finalize re-checks it via the property.
-        if (
+        if (blocked is not None and idx in blocked) or (
             self.spillover
             and state.queue_depth
             > state.config.queue_limit * state.num_instances
         ):
-            idx, spilled = self._finalize(idx, l_total)
+            idx, spilled = self._finalize(idx, l_total, blocked)
         name = self._names[idx]
         self.routed[name] += 1
         return RouteDecision(name, l_total, spilled, c_star, pool_index=idx)
 
-    def _finalize(self, idx: int, budget: int) -> tuple[int, bool]:
+    def _finalize(
+        self, idx: int, budget: int, blocked: Optional[frozenset] = None
+    ) -> tuple[int, bool]:
         """Load-dependent tail of Algorithm 1 (lines 8–14), N-pool form.
 
         Hard-constraint escalation to the nearest feasible pool, then
         load-aware spillover to the nearest non-overloaded pool that admits
         the budget (so a request can never spill into a pool whose context
-        window it exceeds).
+        window it exceeds). Pools in ``blocked`` (health-gated: open
+        circuit breaker or every instance down) are treated as must-spill
+        and skipped as spill targets; health evacuation applies even with
+        ``spillover=False``. If no healthy pool can take the request it
+        stays on the original target (degrade, don't drop).
         """
         idx = self.pools.first_feasible(idx, budget)
-        if not (self.spillover and self.pools.states[idx].overloaded):
+        unhealthy = blocked is not None and idx in blocked
+        if not (
+            unhealthy or (self.spillover and self.pools.states[idx].overloaded)
+        ):
             return idx, False
         for k in self.pools.spill_order(idx):
+            if blocked is not None and k in blocked:
+                continue
             alt = self.pools.states[k]
             if not alt.overloaded and alt.config.admits(budget):
                 self.spill_count += 1
@@ -188,15 +205,18 @@ class TokenBudgetRouter:
         once (vectorized fleet backend / trace re-simulation)."""
         self.calibrator.observe_batch(byte_lens, prompt_tokens, categories)
 
-    def route_decided(self, pool_id: int, budget: int) -> str:
+    def route_decided(
+        self, pool_id: int, budget: int, blocked: Optional[frozenset] = None
+    ) -> str:
         """Finalize one batched decision against live pool state.
 
         Replays the load-dependent tail of Algorithm 1 (hard-constraint
         escalation and spillover) for a static pool index produced by
         :meth:`route_batch`, updating the routed/spill counters exactly
-        like :meth:`route`. Returns the target pool name.
+        like :meth:`route`. ``blocked`` carries health-gated pool indices,
+        as in :meth:`route`. Returns the target pool name.
         """
-        idx, _ = self._finalize(int(pool_id), int(budget))
+        idx, _ = self._finalize(int(pool_id), int(budget), blocked)
         name = self.pools.names[idx]
         self.routed[name] += 1
         return name

@@ -35,11 +35,13 @@ bit-equal across backends (see ``tests/test_vector_engine.py``). One final
 telemetry-only sample (no controller step) is appended after the drain so
 the series always covers the full run.
 
-Telemetry JSON schema — ``repro.obs/telemetry-v1``
---------------------------------------------------
-``FleetTelemetry.to_json()`` emits one object::
+Telemetry JSON schema — ``repro.obs/telemetry-v1`` / ``-v2``
+------------------------------------------------------------
+``FleetTelemetry.to_json()`` emits one object (schema id is ``-v2`` when
+the fleet ran with a :class:`~repro.sim.faults.FaultInjector` attached,
+``-v1`` otherwise; v2 is a strict superset of v1)::
 
-    schema       "repro.obs/telemetry-v1"
+    schema       "repro.obs/telemetry-v1" | "repro.obs/telemetry-v2"
     window       sampling window in dispatched requests (null → control window)
     pools        pool names in budget order (threshold / controller frame)
     num_samples  number of rows; every column has exactly this length
@@ -59,6 +61,13 @@ Telemetry JSON schema — ``repro.obs/telemetry-v1``
                                dispatches of category k (null if none),
                                with est = ceil(bytes/ĉ_k^route) at the boundary
       ema_ratio.cat<k>   float live EMA bytes/token ratio ĉ_k
+      -- telemetry-v2 only (fault injection attached) --
+      retries            int   retry resubmissions in the window (delta)
+      timeouts           int   deadline-exceeded drops in the window (delta)
+      down.<pool>        int   instances currently down (gauge at boundary)
+      failures.<pool>    int   in-flight requests lost in the window (delta)
+      breaker_open.<pool> int  1 if the pool's circuit breaker is open at
+                               the boundary, else 0
     registry     MetricsRegistry.snapshot(): final gauge/counter values and
                  the estimated-budget histogram (edges in tokens)
 
@@ -70,13 +79,19 @@ Event schema — ``repro.obs/events-v1``
 emitted/dropped counts), then one object per event::
 
     kind        arrival | dispatch | admit | preempt | truncate | reject |
-                spill | threshold_move | calib_sync
+                spill | threshold_move | calib_sync | fail | recover |
+                retry | timeout | shed
     t           sim time (s)
     pool        pool name, or "router" for fleet-level events
     request_id  subject request (-1 for fleet-level events)
     value       kind-specific payload: estimated L_total (dispatch),
                 new B_k (threshold_move, with request_id = boundary index),
-                EMA observations folded (calib_sync), else 0
+                EMA observations folded (calib_sync), lost in-flight count
+                (crash/OOM ``fail``, request_id = instance index) or slow
+                factor (slowdown ``fail``), retry attempt number (``retry``,
+                pool = the re-route target), else 0. ``timeout`` and
+                ``shed`` are router-track terminal drops (retry budget or
+                deadline exhausted).
 
 ``to_chrome_trace()`` renders the same events as Chrome trace-event JSON —
 instant events (``ph: "i"``, ``ts`` in µs) on one named thread per pool
@@ -89,11 +104,16 @@ from repro.obs.events import (
     CALIB_SYNC,
     DISPATCH,
     EVENT_NAMES,
+    FAIL,
     PREEMPT,
+    RECOVER,
     REJECT,
+    RETRY,
     ROUTER_TRACK,
+    SHED,
     SPILL,
     THRESHOLD_MOVE,
+    TIMEOUT,
     TRUNCATE,
     EventTrace,
 )
@@ -115,6 +135,11 @@ __all__ = [
     "SPILL",
     "THRESHOLD_MOVE",
     "CALIB_SYNC",
+    "FAIL",
+    "RECOVER",
+    "RETRY",
+    "TIMEOUT",
+    "SHED",
     "EVENT_NAMES",
     "ROUTER_TRACK",
     "EventTrace",

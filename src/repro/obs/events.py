@@ -20,6 +20,17 @@ Event kinds (see :mod:`repro.obs` for field semantics):
                     (value = new B_k; router track)
 ``calib_sync``      a calibration feedback sync (value = observations
                     folded into the EMA; router track)
+``fail``            a fault fired on instance ``request_id`` of the pool
+                    (value = in-flight sequences lost for crash/OOM, or
+                    the slowdown factor for straggler onset)
+``recover``         instance ``request_id`` of the pool returned to
+                    service (crash recovery, warm-up end, or slowdown end)
+``retry``           a lost request was re-dispatched (value = attempt
+                    number; pool = the pool chosen on re-route)
+``timeout``         a request exceeded its deadline and was dropped
+                    (router track)
+``shed``            a request exhausted its retry budget and was dropped
+                    (router track)
 
 Exports: ``to_jsonl()`` (one JSON object per line) and
 ``to_chrome_trace()`` — the Chrome trace-event JSON format, with one
@@ -33,7 +44,8 @@ import json
 
 import numpy as np
 
-#: Typed event kinds (int8 codes stored in the ring).
+#: Typed event kinds (int8 codes stored in the ring). Append-only: codes
+#: 0–8 predate fault injection and must stay stable for old traces.
 (
     ARRIVAL,
     DISPATCH,
@@ -44,7 +56,12 @@ import numpy as np
     SPILL,
     THRESHOLD_MOVE,
     CALIB_SYNC,
-) = range(9)
+    FAIL,
+    RECOVER,
+    RETRY,
+    TIMEOUT,
+    SHED,
+) = range(14)
 
 EVENT_NAMES = (
     "arrival",
@@ -56,6 +73,11 @@ EVENT_NAMES = (
     "spill",
     "threshold_move",
     "calib_sync",
+    "fail",
+    "recover",
+    "retry",
+    "timeout",
+    "shed",
 )
 
 #: Pseudo-pool id for fleet/router-level events (arrival, threshold moves,

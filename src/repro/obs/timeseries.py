@@ -15,8 +15,11 @@ path's only telemetry cost is the ``tracer is not None`` guards in the
 engines, which a disabled run never takes.
 
 Exports: :meth:`to_dict` / :meth:`to_json` (schema
-``repro.obs/telemetry-v1``) and :meth:`to_csv` (one row per window, flat
-dotted column names).
+``repro.obs/telemetry-v1``, or ``repro.obs/telemetry-v2`` when a fault
+runtime is attached — v2 adds fleet ``retries``/``timeouts`` deltas plus
+per-pool ``down.<pool>`` / ``failures.<pool>`` / ``breaker_open.<pool>``
+health columns) and :meth:`to_csv` (one row per window, flat dotted
+column names).
 """
 
 from __future__ import annotations
@@ -72,11 +75,13 @@ class FleetTelemetry:
         pool_names: Sequence[str],
         pools: Sequence,
         router=None,
+        health=None,
     ) -> None:
         self.config = config
         self.pool_names = list(pool_names)
         self._pools = list(pools)
         self._router = router
+        self._health = health
         self.events: Optional[EventTrace] = (
             EventTrace(config.event_capacity, pool_names=self.pool_names)
             if config.events
@@ -131,6 +136,16 @@ class FleetTelemetry:
             for k in range(self._num_categories):
                 self.columns[f"calib_err.cat{k}"] = []
                 self.columns[f"ema_ratio.cat{k}"] = []
+        if health is not None:
+            self.columns["retries"] = []
+            self.columns["timeouts"] = []
+            for name in self.pool_names:
+                self.columns[f"down.{name}"] = []
+                self.columns[f"failures.{name}"] = []
+                self.columns[f"breaker_open.{name}"] = []
+            self._prev_retries = 0
+            self._prev_timeouts = 0
+            self._prev_fail = [0] * len(self._pools)
 
     # -- trace attachment ------------------------------------------------------
     def set_trace(
@@ -197,6 +212,22 @@ class FleetTelemetry:
                 ctr[j].add(delta)
                 prev[j] = cur
 
+        health = self._health
+        if health is not None:
+            cols["retries"].append(health.retries - self._prev_retries)
+            self._prev_retries = health.retries
+            cols["timeouts"].append(health.timeouts - self._prev_timeouts)
+            self._prev_timeouts = health.timeouts
+            for j, name in enumerate(self.pool_names):
+                cols[f"down.{name}"].append(int(health.down_count[j]))
+                cols[f"failures.{name}"].append(
+                    health.failures[j] - self._prev_fail[j]
+                )
+                self._prev_fail[j] = health.failures[j]
+                cols[f"breaker_open.{name}"].append(
+                    int(health.is_open(j, now))
+                )
+
         if router is not None:
             self._sample_calibration(cols, now, lo, hi)
 
@@ -245,8 +276,9 @@ class FleetTelemetry:
         return np.asarray(self.columns[name], dtype=np.float64)
 
     def to_dict(self) -> dict:
+        version = 1 if self._health is None else 2
         return {
-            "schema": "repro.obs/telemetry-v1",
+            "schema": f"repro.obs/telemetry-v{version}",
             "window": self.config.window,
             "pools": list(self.pool_names),
             "num_samples": self.num_samples,

@@ -13,6 +13,11 @@ import json
 from repro.obs.events import EVENT_NAMES
 
 TELEMETRY_SCHEMA = "repro.obs/telemetry-v1"
+#: v2 = v1 plus the fault/health columns (fleet ``retries``/``timeouts``
+#: and per-pool ``down``/``failures``/``breaker_open``); emitted whenever
+#: the fleet ran with a :class:`~repro.sim.faults.FaultInjector` attached.
+TELEMETRY_SCHEMA_V2 = "repro.obs/telemetry-v2"
+TELEMETRY_SCHEMAS = (TELEMETRY_SCHEMA, TELEMETRY_SCHEMA_V2)
 EVENTS_SCHEMA = "repro.obs/events-v1"
 
 #: Fleet-level columns every telemetry export carries.
@@ -27,14 +32,19 @@ POOL_COLUMNS = (
     "rejections",
     "truncations",
 )
+#: Extra fleet-level columns required by telemetry-v2.
+REQUIRED_COLUMNS_V2 = ("retries", "timeouts")
+#: Extra per-pool column families required by telemetry-v2.
+POOL_COLUMNS_V2 = ("down", "failures", "breaker_open")
 
 
 def validate_telemetry(doc) -> dict:
     """Validate a ``FleetTelemetry.to_dict()`` / ``to_json()`` artifact."""
     if isinstance(doc, (str, bytes)):
         doc = json.loads(doc)
-    if doc.get("schema") != TELEMETRY_SCHEMA:
+    if doc.get("schema") not in TELEMETRY_SCHEMAS:
         raise ValueError(f"bad telemetry schema id: {doc.get('schema')!r}")
+    v2 = doc["schema"] == TELEMETRY_SCHEMA_V2
     pools = doc.get("pools")
     if not isinstance(pools, list) or not pools:
         raise ValueError(f"telemetry 'pools' must be a non-empty list: {pools!r}")
@@ -42,11 +52,13 @@ def validate_telemetry(doc) -> dict:
     if not isinstance(cols, dict):
         raise ValueError("telemetry 'columns' must be a dict of lists")
     n = doc.get("num_samples")
-    for name in REQUIRED_COLUMNS:
+    required = REQUIRED_COLUMNS + (REQUIRED_COLUMNS_V2 if v2 else ())
+    pool_fams = POOL_COLUMNS + (POOL_COLUMNS_V2 if v2 else ())
+    for name in required:
         if name not in cols:
             raise ValueError(f"missing telemetry column {name!r}")
     for pool in pools:
-        for fam in POOL_COLUMNS:
+        for fam in pool_fams:
             if f"{fam}.{pool}" not in cols:
                 raise ValueError(f"missing per-pool column {fam}.{pool!r}")
     for name, vals in cols.items():

@@ -15,9 +15,17 @@ Two interchangeable fleet backends (``FleetSim(backend=...)``):
 
 Fleets route over a budget-ordered :class:`~repro.core.pools.PoolSet` —
 any pool count, the paper's short/long pair being P=2.
+
+Fault injection (:mod:`repro.sim.faults`): pass
+``FleetSim(..., injector=FaultInjector(specs), retry_policy=RetryPolicy())``
+to subject either backend to instance crashes, KV-OOM kills, and transient
+slowdowns with retry/timeout/backoff and health-gated routing. Both
+backends implement identical fault semantics; fault-off runs are
+bit-identical to pre-fault builds.
 """
 
 from repro.sim.engine import InstanceSim
+from repro.sim.faults import FaultInjector, FaultRuntime, FaultSpec, RetryPolicy
 from repro.sim.fleet import FleetResult, FleetSim, PoolSim, run_fleet
 from repro.sim.metrics import (
     PAPER_SLO,
@@ -49,6 +57,10 @@ from repro.sim.timing import (
 
 __all__ = [
     "InstanceSim",
+    "FaultInjector",
+    "FaultRuntime",
+    "FaultSpec",
+    "RetryPolicy",
     "FleetResult",
     "FleetSim",
     "PoolSim",

@@ -112,6 +112,12 @@ class InstanceSim:
         self.tracer = None
         self.pool_index = 0
         self._now = 0.0  # iteration-end time, maintained only when tracing
+        # Fault-injection state (repro.sim.faults). Defaults are the
+        # fault-free fast path: `now < 0.0` is false and `slow_factor`
+        # stays exactly 1.0, so un-faulted runs are bit-identical.
+        self.downed = False
+        self.down_until = 0.0
+        self.slow_factor = 1.0
 
     # -- queue interface (fleet layer) ---------------------------------------
     @property
@@ -225,15 +231,69 @@ class InstanceSim:
         self._state_add(+1, -1)
         return True
 
+    # -- fault application (repro.sim.faults) ----------------------------------
+    def _drop_sequences(self, victims: list[_Seq], requeue: bool) -> list[int]:
+        """Destroy in-flight sequences; requeue locally or report them lost.
+
+        Victims must be in admission order; requeue preserves that order at
+        the head of the queue (recompute-style, generated tokens folded into
+        the prompt). Returns the lost request ids (empty when requeueing).
+        """
+        for seq in victims:
+            self.blocks_free += seq.blocks
+            seq.blocks = 0
+        self._state_add(0, -len(victims))
+        if requeue:
+            for seq in reversed(victims):
+                req = seq.request
+                self._carried_preemptions[req.request_id] = seq.preemptions
+                restart = dataclasses.replace(
+                    req, true_input_tokens=req.true_input_tokens + seq.generated
+                )
+                self.queue.appendleft((restart, seq.enqueue_time))
+            self._state_add(+len(victims), 0)
+            return []
+        lost = [seq.request.request_id for seq in victims]
+        for rid in lost:
+            self._carried_preemptions.pop(rid, None)
+        return lost
+
+    def fault_crash(self, now: float, requeue: bool) -> list[int]:
+        """Hard crash: every in-flight sequence is dropped.
+
+        Downtime itself is handled by the fleet via ``down_until`` — the
+        instance's pending iteration event self-reschedules through the
+        early return in :meth:`step`.
+        """
+        victims = self.active
+        self.active = []
+        return self._drop_sequences(victims, requeue)
+
+    def fault_oom(self, now: float, evict_frac: float, requeue: bool) -> list[int]:
+        """KV-OOM kill: evict the youngest ``evict_frac`` of resident seqs."""
+        n = len(self.active)
+        if n == 0:
+            return []
+        k = min(n, max(1, math.ceil(evict_frac * n)))
+        victims = self.active[n - k :]
+        del self.active[n - k :]
+        return self._drop_sequences(victims, requeue)
+
     # -- one engine iteration ---------------------------------------------------
     def step(self, now: float) -> tuple[float, list[RequestRecord]]:
         """Run one iteration starting at `now`; returns (t_iter, completions)."""
+        if now < self.down_until:
+            # Crashed: sleep (not busy) until recovery, then resume. Queued
+            # work survives; admission happens at recovery time.
+            return self.down_until - now, []
         self._try_admit(now)
         if not self.active:
             return 0.0, []
 
         n_active = len(self.active)
         t_iter = self.timing.iter_time(n_active)
+        if self.slow_factor != 1.0:
+            t_iter *= self.slow_factor
         end = now + t_iter
         if self.tracer is not None:
             self._now = end  # timestamp for mid-iteration preempt events

@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import math
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -60,6 +61,7 @@ from repro.core.router import Request, TokenBudgetRouter
 from repro.obs.events import (
     ARRIVAL,
     DISPATCH,
+    RETRY,
     ROUTER_TRACK,
     SPILL,
     THRESHOLD_MOVE,
@@ -67,6 +69,7 @@ from repro.obs.events import (
 )
 from repro.obs.timeseries import FleetTelemetry, TelemetryConfig
 from repro.sim.engine import InstanceSim
+from repro.sim.faults import FaultInjector, FaultRuntime, RetryPolicy
 from repro.sim.metrics import (
     PAPER_SLO,
     RequestRecord,
@@ -100,6 +103,7 @@ class PoolSim:
             )
             for i in range(num_instances)
         ]
+        self._n_down = 0
 
     def refresh_state(self) -> None:
         """Recompute the dispatch counters from scratch.
@@ -113,7 +117,42 @@ class PoolSim:
         self.state.active = sum(len(i.active) for i in self.instances)
 
     def least_loaded(self) -> InstanceSim:
+        # Health gating (fault injection): down instances are ejected from
+        # dispatch; with every instance down, fall back to plain least-
+        # loaded so requests queue for recovery instead of vanishing. Same
+        # tie-break as the vectorized backend's masked argmin.
+        if 0 < self._n_down < len(self.instances):
+            return min(
+                (i for i in self.instances if not i.downed),
+                key=lambda i: i.load,
+            )
         return min(self.instances, key=lambda i: i.load)
+
+    # -- fault application (repro.sim.faults) --------------------------------
+    def install_faults(self) -> None:
+        """API twin of ``VectorPoolSim.install_faults`` (the reference
+        instances check their fault fields unconditionally)."""
+
+    def set_down(self, instance: int, down: bool, until: float = 0.0) -> None:
+        inst = self.instances[instance]
+        if down and not inst.downed:
+            self._n_down += 1
+        if not down and inst.downed:
+            self._n_down -= 1
+        inst.downed = down
+        if down:
+            inst.down_until = until
+
+    def set_slow(self, instance: int, factor: float) -> None:
+        self.instances[instance].slow_factor = factor
+
+    def fault_crash(self, instance: int, now: float, requeue: bool) -> list[int]:
+        return self.instances[instance].fault_crash(now, requeue)
+
+    def fault_oom(
+        self, instance: int, now: float, evict_frac: float, requeue: bool
+    ) -> list[int]:
+        return self.instances[instance].fault_oom(now, evict_frac, requeue)
 
     def kv_occupancy(self) -> float:
         """Pool-wide KV block utilization: 1 − blocks_free / total_blocks."""
@@ -148,6 +187,16 @@ class FleetResult:
     #: Mid-generation context-window truncations across the fleet — the
     #: third component of the adaptive controller's error signal.
     truncations: int = 0
+    #: Fault-injection counters (zero on fault-free runs): re-dispatches of
+    #: requests whose in-flight state a fault destroyed, deadline drops,
+    #: retry-budget drops, and instance-level fault applications
+    #: (crashes + KV-OOM kills).
+    retries: int = 0
+    timeouts: int = 0
+    shed: int = 0
+    instance_failures: int = 0
+    #: Up instance-seconds / total instance-seconds over [0, t_end].
+    availability: float = 1.0
     #: Canonical per-request outcomes — every submitted request appears
     #: exactly once (completed, truncated, or rejected). Populated by the
     #: reference backend; the vectorized backend keeps outcomes columnar
@@ -155,6 +204,12 @@ class FleetResult:
     #: ``FleetSim.pools[name].record_arrays()`` (or ``.records`` to
     #: materialize RequestRecord objects) on the vectorized pools.
     records: Optional[list[RequestRecord]] = None
+    #: Fleet-level terminal-failure records (``pool="fleet"``,
+    #: ``rejected=True``) for requests dropped by fault injection after
+    #: exhausting retries or their deadline. Populated by BOTH backends
+    #: (they are few); already folded into ``summary`` and — on the
+    #: reference backend — into ``records``, but absent from ``per_pool``.
+    fail_records: list[RequestRecord] = dataclasses.field(default_factory=list)
     #: Windowed time series (+ optional event trace at ``telemetry.events``)
     #: from :mod:`repro.obs`; populated when the fleet ran with telemetry.
     telemetry: Optional[FleetTelemetry] = None
@@ -163,6 +218,13 @@ class FleetResult:
 
     def meets_slo(self) -> bool:
         return self.summary.meets_slo(self.slo)
+
+    def goodput(self) -> float:
+        """Useful throughput: completed non-truncated requests per second."""
+        s = self.summary
+        if s.makespan <= 0:
+            return 0.0
+        return (s.completed - s.truncated) / s.makespan
 
 
 class FleetSim:
@@ -204,6 +266,8 @@ class FleetSim:
         control_window: int = 512,
         telemetry: Union[bool, TelemetryConfig, None] = None,
         slo: SLOTarget = PAPER_SLO,
+        injector: Optional[FaultInjector] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ) -> None:
         if backend not in ("reference", "vectorized"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -276,12 +340,30 @@ class FleetSim:
         else:
             ordered = list(self.pools.items())
         self._pool_index = {name: i for i, (name, _) in enumerate(ordered)}
+        # -- fault injection (repro.sim.faults) -------------------------------
+        # Built in the same budget-ordered frame as telemetry and the
+        # controller; None keeps every fault hook off the hot path.
+        self.injector = injector
+        self.retry_policy = retry_policy
+        self._fault_rt: Optional[FaultRuntime] = None
+        if injector is not None:
+            for _, p in ordered:
+                p.install_faults()
+            self._fault_rt = FaultRuntime(
+                injector,
+                retry_policy,
+                [name for name, _ in ordered],
+                [p for _, p in ordered],
+            )
+        elif retry_policy is not None:
+            raise ValueError("retry_policy has no effect without injector=")
         if telemetry is not None:
             self.telemetry = FleetTelemetry(
                 telemetry,
                 [name for name, _ in ordered],
                 [p for _, p in ordered],
                 router=self.router,
+                health=self._fault_rt,
             )
             self.tracer = self.telemetry.events
             if self.tracer is not None:
@@ -292,6 +374,8 @@ class FleetSim:
                     for eng in engines:
                         eng.tracer = self.tracer
                         eng.pool_index = idx
+        if self._fault_rt is not None:
+            self._fault_rt.tracer = self.tracer
         # Sampling/monitoring windows, counted in dispatched requests. With
         # a controller the window IS the control window (telemetry samples
         # land exactly on controller boundaries); telemetry alone may pick
@@ -388,7 +472,12 @@ class FleetSim:
             return pool
         # PoolState counters are maintained incrementally by the engines —
         # dispatch is O(1), no per-arrival instance sweep.
-        decision = self.router.route(request)
+        if self._fault_rt is not None:
+            decision = self.router.route(
+                request, blocked=self._fault_rt.blocked(request.arrival_time)
+            )
+        else:
+            decision = self.router.route(request)
         if self.tracer is not None:
             t = request.arrival_time
             rid = request.request_id
@@ -399,6 +488,74 @@ class FleetSim:
             if decision.spilled:
                 self.tracer.emit(SPILL, t, decision.pool_index, rid)
         return self.pools[decision.pool]
+
+    # -- fault application (both backends) ------------------------------------
+    def _apply_fault(self, tr, on_fail) -> None:
+        """Apply one compiled fault transition at exactly ``tr.t``.
+
+        Backend-agnostic: both pool sim classes expose the same
+        ``set_down``/``set_slow``/``fault_crash``/``fault_oom`` surface.
+        ``on_fail(request_id, t)`` writes the backend's failure record for
+        requests that are finally dropped (no retry scheduled).
+        """
+        rt = self._fault_rt
+        pool = rt.pool_sims[tr.pool_idx]
+        t = tr.t
+        if tr.action == "crash":
+            # Down state first: the engines' reschedule logic reads it.
+            pool.set_down(tr.instance, True, until=tr.until)
+            lost = pool.fault_crash(tr.instance, t, tr.requeue)
+            rt.on_instance_fault(tr, len(lost), t)
+            for rid in lost:
+                if not rt.on_lost(rid, tr.pool_idx, t):
+                    on_fail(rid, t)
+        elif tr.action == "oom":
+            lost = pool.fault_oom(tr.instance, t, tr.frac, tr.requeue)
+            rt.on_instance_fault(tr, len(lost), t)
+            for rid in lost:
+                if not rt.on_lost(rid, tr.pool_idx, t):
+                    on_fail(rid, t)
+        elif tr.action == "slow":
+            pool.set_slow(tr.instance, tr.factor)
+            rt.on_slow(tr, t)
+        elif tr.action == "recover":
+            pool.set_down(tr.instance, False)
+            # Warm-up: admit immediately but run degraded until warm.
+            pool.set_slow(tr.instance, tr.factor)
+            rt.on_recover(tr, t)
+        else:  # slow_end / warm-up end
+            pool.set_slow(tr.instance, 1.0)
+            rt.on_recover(tr, t)
+
+    def _route_retry(self, request: Request, t: float, avoid_idx: int):
+        """Re-route one retry: skip the failed pool and any health-blocked
+        pool, count it, emit the RETRY event. Returns the target pool sim.
+
+        Retries deliberately do not tick the monitoring windows — windows
+        count *trace* arrivals in both backends, keeping controller
+        trajectories comparable between faulted and fault-free runs.
+        """
+        rt = self._fault_rt
+        rt.retries += 1
+        if self.router is None:
+            ((_, pool),) = self.pools.items()
+            idx = 0
+        else:
+            blocked = rt.blocked(t)
+            blocked = (
+                frozenset((avoid_idx,))
+                if blocked is None
+                else blocked | {avoid_idx}
+            )
+            decision = self.router.route(request, blocked=blocked)
+            pool = self.pools[decision.pool]
+            idx = decision.pool_index
+        if self.tracer is not None:
+            attempt = rt.attempts.get(request.request_id, 0)
+            self.tracer.emit(
+                RETRY, t, idx, request.request_id, float(attempt)
+            )
+        return pool
 
     # -- main loop -------------------------------------------------------------
     def run(self, trace: Trace) -> FleetResult:
@@ -431,9 +588,53 @@ class FleetSim:
             )
         last_t = 0.0
 
-        while ai < len(arrivals) or heap:
+        # Fault injection: compiled transitions and scheduled retries join
+        # the event race below; requests that are finally dropped get a
+        # fleet-level failure record (rejected=True at the drop time) so
+        # every trace request still appears exactly once in the summary.
+        rt = self._fault_rt
+        fail_records: list[RequestRecord] = []
+        if rt is not None:
+            rt.begin(arrival_of=lambda rid: lookup[rid].arrival_time)
+
+        def on_fail(rid: int, t: float) -> None:
+            req = lookup[rid]
+            fail_records.append(
+                RequestRecord(
+                    request_id=rid,
+                    pool="fleet",
+                    arrival=req.arrival_time,
+                    first_token=t,
+                    finish=t,
+                    output_tokens=0,
+                    rejected=True,
+                )
+            )
+
+        while ai < len(arrivals) or heap or (rt is not None and rt.pending()):
             next_arrival = arrivals[ai].arrival_time if ai < len(arrivals) else None
             next_event = heap[0][0] if heap else None
+
+            if rt is not None:
+                # Faults and retries win exact-time ties against arrivals
+                # and engine iterations (the vectorized pump mirrors this).
+                t_f = rt.next_time()
+                if (
+                    t_f != math.inf
+                    and (next_arrival is None or t_f <= next_arrival)
+                    and (next_event is None or t_f <= next_event)
+                ):
+                    kind, item = rt.pop()
+                    last_t = t_f
+                    if kind == "fault":
+                        self._apply_fault(item, on_fail)
+                    else:
+                        t_r, _, rid, _attempt, avoid = item
+                        pool = self._route_retry(lookup[rid], t_r, avoid)
+                        inst = pool.least_loaded()
+                        if inst.submit(lookup[rid], t_r):
+                            wake(inst, t_r)
+                    continue
 
             if next_event is None or (
                 next_arrival is not None and next_arrival <= next_event
@@ -466,11 +667,14 @@ class FleetSim:
                 heapq.heappush(heap, (now + max(t_iter, 1e-9), next(counter), inst))
 
         # Canonical record list: one entry per submitted request (completed
-        # or rejected), collected exactly once from the instances.
+        # or rejected), collected exactly once from the instances — plus
+        # the fleet-level failure records of requests dropped by faults.
         all_records = [r for p in self.pools.values() for r in p.records]
+        all_records.extend(fail_records)
         # Final flush at the drain end (max finish — matching the vectorized
         # backend's notion of the run's end time exactly).
-        self._finish_windows(max((r.finish for r in all_records), default=last_t))
+        t_end = max((r.finish for r in all_records), default=last_t)
+        self._finish_windows(t_end)
         spills = self.router.spill_count if self.router else 0
         per_pool = {
             name: summarize(name, p.records, total_spills=0)
@@ -483,7 +687,13 @@ class FleetSim:
             preemptions=sum(p.preemptions for p in self.pools.values()),
             rejections=sum(p.rejections for p in self.pools.values()),
             truncations=sum(p.truncations for p in self.pools.values()),
+            retries=rt.retries if rt is not None else 0,
+            timeouts=rt.timeouts if rt is not None else 0,
+            shed=rt.shed if rt is not None else 0,
+            instance_failures=rt.instance_failures if rt is not None else 0,
+            availability=rt.availability(t_end) if rt is not None else 1.0,
             records=all_records,
+            fail_records=fail_records,
             telemetry=self.telemetry,
             slo=self.slo,
         )
@@ -503,7 +713,7 @@ class FleetSim:
         escalation, spillover, counters) is the router's
         :meth:`~repro.core.router.TokenBudgetRouter.route_decided`, shared
         with the scalar dispatch path. ``t``/``rid`` are only passed (and
-        only used) when event tracing is on.
+        only used) when event tracing or fault injection is on.
         """
         if self.router is None:
             (pool,) = self.pools.values()
@@ -511,11 +721,18 @@ class FleetSim:
                 self.tracer.emit(ARRIVAL, t, ROUTER_TRACK, rid)
                 self.tracer.emit(DISPATCH, t, 0, rid)
             return pool
+        blocked = (
+            self._fault_rt.blocked(t) if self._fault_rt is not None else None
+        )
         if self.tracer is None:
-            name = self.router.route_decided(int(pool_ids[j]), int(budgets[j]))
+            name = self.router.route_decided(
+                int(pool_ids[j]), int(budgets[j]), blocked
+            )
             return self.pools[name]
         spills0 = self.router.spill_count
-        name = self.router.route_decided(int(pool_ids[j]), int(budgets[j]))
+        name = self.router.route_decided(
+            int(pool_ids[j]), int(budgets[j]), blocked
+        )
         idx = self._pool_index[name]
         self.tracer.emit(ARRIVAL, t, ROUTER_TRACK, rid)
         self.tracer.emit(DISPATCH, t, idx, rid, float(budgets[j]))
@@ -567,6 +784,59 @@ class FleetSim:
 
         wake_min = np.inf
 
+        # Fault injection: transitions and retries are pumped in time order
+        # between coalesced windows, with sweeps to each exact fault time so
+        # an instance's state at a crash is the same state the reference
+        # backend sees (iterations starting strictly before the fault have
+        # run; the one at the fault time has not).
+        rt = self._fault_rt
+        fail_rows: list[tuple[int, float, float]] = []
+
+        def _trace_index(rid: int) -> int:
+            return int(id_order[np.searchsorted(ids_sorted, rid)])
+
+        if rt is not None:
+            rt.begin(
+                arrival_of=lambda rid: float(arrival[_trace_index(rid)])
+            )
+
+        def on_fail(rid: int, t: float) -> None:
+            fail_rows.append((rid, float(arrival[_trace_index(rid)]), t))
+
+        def pump_faults(t_until: float) -> None:
+            nonlocal wake_min
+            while rt.pending():
+                t_next = rt.next_time()
+                if t_next > t_until:
+                    break
+                wake_min = sweep_all(t_next)
+                kind, item = rt.pop()
+                if kind == "fault":
+                    self._apply_fault(item, on_fail)
+                    wake_min = min(p.wake_min for p in pools)
+                else:
+                    t_r, _, rid, _attempt, avoid = item
+                    jx = _trace_index(rid)
+                    req = Request(
+                        request_id=rid,
+                        byte_len=int(byte_by[jx]),
+                        max_output_tokens=int(mot_by[jx]),
+                        category=int(cat_by[jx]),
+                        arrival_time=float(arrival[jx]),
+                        true_input_tokens=int(inp_by[jx]),
+                        true_output_tokens=int(out_by[jx]),
+                    )
+                    pool = self._route_retry(req, t_r, avoid)
+                    if pool.submit_raw(
+                        pool.least_loaded(),
+                        rid,
+                        float(arrival[jx]),
+                        int(inp_by[jx]),
+                        int(out_by[jx]),
+                        t_r,
+                    ):
+                        wake_min = min(wake_min, pool.wake_min)
+
         n = len(cols)
         pos = 0
         pool_ids = budgets = None
@@ -607,10 +877,12 @@ class FleetSim:
                 )
                 jend = max(jend, j + 1)
                 t_sync = arrival[jend - 1]
+                if rt is not None:
+                    pump_faults(float(t_sync))
                 if t_sync > wake_min:
                     wake_min = sweep_all(t_sync)
                 for jj in range(j, jend):
-                    if tracer is None:
+                    if tracer is None and rt is None:
                         pool = self._dispatch_one(pool_ids, budgets, jj - start)
                     else:
                         pool = self._dispatch_one(
@@ -639,18 +911,43 @@ class FleetSim:
             # Epoch boundary: sync completed-request feedback into the EMA.
             feedback()
 
+        if rt is not None:
+            # Drain the full fault/retry schedule in time order (sweeping to
+            # each event), then finish whatever work is still in flight.
+            pump_faults(np.inf)
         sweep_all(np.inf)
         feedback()
 
         per_pool_cols = {name: p.record_arrays() for name, p in self.pools.items()}
-        fleet_cols = concat_record_columns(list(per_pool_cols.values()))
-        if self.telemetry is not None:
-            finish = fleet_cols.get("finish")
-            t_end = (
-                float(finish.max())
-                if finish is not None and len(finish)
-                else (float(arrival[-1]) if n else 0.0)
+        all_cols = list(per_pool_cols.values())
+        if rt is not None and fail_rows:
+            nf = len(fail_rows)
+            zeros = np.zeros(nf, dtype=np.int64)
+            t_fail = np.asarray([r[2] for r in fail_rows], dtype=np.float64)
+            all_cols.append(
+                {
+                    "request_id": np.asarray(
+                        [r[0] for r in fail_rows], dtype=np.int64
+                    ),
+                    "arrival": np.asarray(
+                        [r[1] for r in fail_rows], dtype=np.float64
+                    ),
+                    "first_token": t_fail,
+                    "finish": t_fail,
+                    "output_tokens": zeros,
+                    "preemptions": zeros,
+                    "truncated": np.zeros(nf, dtype=bool),
+                    "rejected": np.ones(nf, dtype=bool),
+                }
             )
+        fleet_cols = concat_record_columns(all_cols)
+        finish = fleet_cols.get("finish")
+        t_end = (
+            float(finish.max())
+            if finish is not None and len(finish)
+            else (float(arrival[-1]) if n else 0.0)
+        )
+        if self.telemetry is not None:
             self._finish_windows(t_end)
         spills = router.spill_count if router else 0
         return FleetResult(
@@ -663,6 +960,23 @@ class FleetSim:
             preemptions=sum(p.preemptions for p in pools),
             rejections=sum(p.rejections for p in pools),
             truncations=sum(p.truncations for p in pools),
+            retries=rt.retries if rt is not None else 0,
+            timeouts=rt.timeouts if rt is not None else 0,
+            shed=rt.shed if rt is not None else 0,
+            instance_failures=rt.instance_failures if rt is not None else 0,
+            availability=rt.availability(t_end) if rt is not None else 1.0,
+            fail_records=[
+                RequestRecord(
+                    request_id=rid,
+                    pool="fleet",
+                    arrival=arr,
+                    first_token=t_f,
+                    finish=t_f,
+                    output_tokens=0,
+                    rejected=True,
+                )
+                for rid, arr, t_f in fail_rows
+            ],
             telemetry=self.telemetry,
             slo=self.slo,
         )
@@ -683,6 +997,8 @@ def run_fleet(
     control_window: int = 512,
     telemetry: Union[bool, TelemetryConfig, None] = None,
     slo: SLOTarget = PAPER_SLO,
+    injector: Optional[FaultInjector] = None,
+    retry_policy: Optional[RetryPolicy] = None,
 ) -> FleetResult:
     """Convenience wrapper: build a FleetSim and run the trace."""
     sim = FleetSim(
@@ -698,5 +1014,7 @@ def run_fleet(
         control_window=control_window,
         telemetry=telemetry,
         slo=slo,
+        injector=injector,
+        retry_policy=retry_policy,
     )
     return sim.run(trace)

@@ -178,6 +178,15 @@ class VectorPoolSim:
         # None keeps the fast-path rounds free of any telemetry work.
         self.tracer = None
         self.pool_index = 0
+        # Fault-injection lanes (repro.sim.faults): per-instance slowdown
+        # factors and down masks, applied as masked array ops inside the
+        # round. ``_faulty`` stays False on fault-free runs so the hot path
+        # is one extra predicate, exactly like ``tracer is None``.
+        self._faulty = False
+        self._n_down = 0
+        self.slow = np.ones(ii, dtype=np.float64)
+        self.down = np.zeros(ii, dtype=bool)
+        self.down_until = np.zeros(ii, dtype=np.float64)
 
     # -- dispatch interface (fleet layer) ------------------------------------
     @property
@@ -203,7 +212,14 @@ class VectorPoolSim:
 
     def least_loaded(self) -> int:
         """First instance with minimal load — same tie-break as the
-        reference path's ``min(instances, key=load)``."""
+        reference path's ``min(instances, key=load)``.
+
+        Down instances are ejected from dispatch (masked to an impossible
+        load); when *every* instance is down, dispatch falls back to plain
+        least-loaded so requests queue for recovery instead of vanishing.
+        """
+        if 0 < self._n_down < self.num_instances:
+            return int(np.argmin(np.where(self.down, _BIG, self.load)))
         return int(np.argmin(self.load))
 
     def submit(self, instance: int, request: Request, now: float) -> bool:
@@ -243,8 +259,17 @@ class VectorPoolSim:
         self.load[instance] += 1
         self.state.queue_depth += 1
         if not np.isfinite(self.next_wake[instance]):
-            self.next_wake[instance] = now
-            self.wake_min = min(self.wake_min, now)
+            t0 = now
+            if (
+                self._faulty
+                and self.down[instance]
+                and now < self.down_until[instance]
+            ):
+                # Reference parity: a sleeping crashed instance woken by a
+                # submit self-reschedules to its recovery time.
+                t0 = float(self.down_until[instance])
+            self.next_wake[instance] = t0
+            self.wake_min = min(self.wake_min, t0)
         return True
 
     # -- records -------------------------------------------------------------
@@ -366,6 +391,92 @@ class VectorPoolSim:
         self.state.active -= 1
         return True
 
+    # -- fault application (repro.sim.faults) --------------------------------
+    def install_faults(self) -> None:
+        """Arm the per-round fault lanes (slowdown multiply, down masks)."""
+        self._faulty = True
+
+    def set_down(self, instance: int, down: bool, until: float = 0.0) -> None:
+        if down and not self.down[instance]:
+            self._n_down += 1
+        if not down and self.down[instance]:
+            self._n_down -= 1
+        self.down[instance] = down
+        if down:
+            self.down_until[instance] = until
+
+    def set_slow(self, instance: int, factor: float) -> None:
+        self.slow[instance] = factor
+
+    def _drop_slots(self, i: int, order: np.ndarray, requeue: bool) -> list[int]:
+        """Destroy the given slots (admission order); requeue or report lost.
+
+        Mirrors ``InstanceSim._drop_sequences``: blocks freed, recompute-
+        style head-of-queue reinsertion preserving admission order.
+        """
+        k = len(order)
+        if k == 0:
+            return []
+        self.blocks_free[i] += int(self.blocks[i, order].sum())
+        self.blocks[i, order] = 0
+        self.occupied[i, order] = False
+        self.n_active[i] -= k
+        self.state.active -= k
+        if requeue:
+            for s in order[::-1]:
+                self.queues[i].appendleft(
+                    (
+                        int(self.req_id[i, s]),
+                        float(self.arrival[i, s]),
+                        int(self.input_tokens[i, s] + self.generated[i, s]),
+                        int(self.output_tokens[i, s]),
+                        float(self.enqueue[i, s]),
+                        int(self.preempt_carried[i, s]),
+                    )
+                )
+            self.queue_len[i] += k
+            self.state.queue_depth += k
+            return []
+        self.load[i] -= k
+        return [int(self.req_id[i, s]) for s in order]
+
+    def fault_crash(self, instance: int, now: float, requeue: bool) -> list[int]:
+        """Hard crash: drop all in-flight sequences, sleep until recovery.
+
+        Call :meth:`set_down` first so the reschedule below sees the
+        recovery time. Queued work survives; the pending wake becomes
+        ``max(pending wake, down_until)`` — exactly when the reference
+        instance's self-rescheduling heap event next admits (its in-heap
+        event fires at the old time and either admits there, post-recovery,
+        or re-sleeps until ``down_until``). A crash on an idle instance
+        leaves it asleep; ``submit_raw``'s downtime guard covers later
+        arrivals.
+        """
+        i = instance
+        slots = np.flatnonzero(self.occupied[i])
+        order = slots[np.argsort(self.seq_no[i, slots], kind="stable")]
+        lost = self._drop_slots(i, order, requeue)
+        nw = float(self.next_wake[i])
+        if np.isfinite(nw):
+            self.next_wake[i] = max(nw, float(self.down_until[i]))
+            self.wake_min = float(self.next_wake.min())
+        return lost
+
+    def fault_oom(
+        self, instance: int, now: float, evict_frac: float, requeue: bool
+    ) -> list[int]:
+        """KV-OOM kill: evict the youngest ``evict_frac`` of resident seqs
+        (last in admission order — the same direction preemption victims
+        go). The instance itself stays up."""
+        i = instance
+        slots = np.flatnonzero(self.occupied[i])
+        n = len(slots)
+        if n == 0:
+            return []
+        order = slots[np.argsort(self.seq_no[i, slots], kind="stable")]
+        k = min(n, max(1, int(np.ceil(evict_frac * n))))
+        return self._drop_slots(i, order[n - k :], requeue)
+
     # -- scalar fallback round (KV-pressure: order-dependent) ----------------
     def _scalar_round(self, i: int, now: float, end: float) -> None:
         """One exact reference-engine decode phase for instance ``i``.
@@ -467,6 +578,12 @@ class VectorPoolSim:
         nact = nact[busy]
         now = self.next_wake[rows]
         t_it = self.timing.iter_time_batch(nact)
+        if self._faulty:
+            # Straggler lanes: per-instance iteration-time multiplier.
+            # Multiplying by exactly 1.0 is a bit-exact no-op, so healthy
+            # lanes are unaffected (reference parity: base time first,
+            # then the factor).
+            t_it = t_it * self.slow[rows]
 
         # 1) One prefill chunk of up to C tokens to the oldest prefilling
         #    sequence of each instance (admission order == seq_no order).

@@ -97,6 +97,35 @@ class TestFault:
         hm.mark_dead(1)
         assert sorted(hm.alive_hosts(now=104.0)) == [0, 2]
 
+    def test_health_monitor_injectable_clock(self):
+        """Sim-time replay: a injected clock makes alive_hosts deterministic
+        with no ``now=`` arguments (the FaultRuntime drives it this way)."""
+        t = [0.0]
+        hm = HealthMonitor(timeout_s=10, clock=lambda: t[0])
+        hm.heartbeat("a")
+        t[0] = 9.0
+        assert hm.alive_hosts() == ["a"]
+        t[0] = 11.0
+        assert hm.alive_hosts() == []
+
+    def test_mark_dead_without_heartbeat(self):
+        """A host declared dead before ever heartbeating must stay dead —
+        and reappear in alive_hosts only after an explicit revive."""
+        hm = HealthMonitor(timeout_s=10, clock=lambda: 0.0)
+        hm.mark_dead("ghost")
+        assert hm.alive_hosts() == []
+        assert hm.dead_hosts() == ["ghost"]
+        hm.revive("ghost")
+        assert hm.alive_hosts() == ["ghost"]
+        assert hm.dead_hosts() == []
+
+    def test_revive_refreshes_heartbeat(self):
+        hm = HealthMonitor(timeout_s=10, clock=lambda: 100.0)
+        hm.heartbeat("a", now=0.0)  # stale
+        hm.mark_dead("a")
+        hm.revive("a", now=99.0)
+        assert hm.alive_hosts() == ["a"]
+
     def test_step_timer_flags_stragglers(self):
         st = StepTimer(window=16, multiplier=2.0)
         for _ in range(16):

@@ -1,0 +1,377 @@
+"""Fault injection + failure recovery (:mod:`repro.sim.faults`).
+
+Unit tests for the spec/schedule/policy layer plus fleet-level behavior:
+crash/OOM/slowdown disposition, retry/timeout/shed accounting, circuit
+breakers and health-gated routing, availability, fault-off bit-identity,
+and the telemetry-v2 health columns. Cross-backend equivalence of the
+fault semantics lives in ``tests/test_vector_engine.py``
+(``TestFaultEquivalence``); this file pins the *semantics* on the
+reference backend and the guard discipline on both.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.pools import PoolConfig
+from repro.core.router import Request
+from repro.obs import TelemetryConfig, validate_telemetry
+from repro.sim import FaultInjector, FaultSpec, FleetSim, RetryPolicy, run_fleet
+from repro.sim.faults import _unit_hash
+from repro.sim.timing import TimingModel
+
+#: Dyadic constants (as in test_vector_engine): every event time is an
+#: exact binary float, so cross-run comparisons can demand equality.
+DYADIC = TimingModel("dyadic", w_base=2**-10, h_per_seq=2**-13, prefill_chunk=512)
+
+
+def poisson_trace(n, rate, seed, *, l_in=(16, 3000), l_out=(1, 400)):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [
+        Request(
+            request_id=i,
+            byte_len=int(rng.integers(4, 12_000)),
+            max_output_tokens=int(rng.integers(*l_out)),
+            category=int(rng.integers(0, 4)),
+            arrival_time=float(arrivals[i]),
+            true_input_tokens=int(rng.integers(*l_in)),
+            true_output_tokens=int(rng.integers(*l_out)),
+        )
+        for i in range(n)
+    ]
+
+
+CFG = PoolConfig("p", 4096, 16)
+
+
+def run_pool(trace, *, backend="reference", instances=4, injector=None,
+             policy=None, telemetry=None):
+    sim = FleetSim(
+        {CFG.name: (CFG, instances)},
+        DYADIC,
+        backend=backend,
+        coalesce_dt=0.0,
+        injector=injector,
+        retry_policy=policy,
+        telemetry=telemetry,
+    )
+    return sim, sim.run(trace)
+
+
+def all_tuples(sim, res):
+    pool = sorted(
+        (r.request_id, r.arrival, r.first_token, r.finish,
+         r.output_tokens, r.preemptions, r.truncated, r.rejected)
+        for p in sim.pools.values() for r in p.records
+    )
+    fails = sorted((r.request_id, r.arrival, r.finish) for r in res.fail_records)
+    return pool, fails
+
+
+class TestFaultSpec:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("powercut", "p")
+
+    def test_negative_times_rejected(self):
+        with pytest.raises(ValueError):
+            FaultSpec("crash", "p", t=-1.0)
+        with pytest.raises(ValueError):
+            FaultSpec("crash", "p", duration=-0.1)
+
+    def test_slowdown_needs_positive_factor(self):
+        with pytest.raises(ValueError):
+            FaultSpec("slowdown", "p", factor=0.0)
+
+    def test_evict_frac_bounds(self):
+        with pytest.raises(ValueError):
+            FaultSpec("oom", "p", evict_frac=0.0)
+        with pytest.raises(ValueError):
+            FaultSpec("oom", "p", evict_frac=1.5)
+        FaultSpec("oom", "p", evict_frac=1.0)  # inclusive upper bound
+
+
+class TestInjectorCompile:
+    def test_transitions_time_ordered(self):
+        inj = FaultInjector(
+            (
+                FaultSpec("slowdown", "p", 0, t=2.0, duration=1.0, factor=2.0),
+                FaultSpec("crash", "p", 1, t=0.5, duration=1.0, warmup=0.5),
+                FaultSpec("oom", "p", 2, t=1.0),
+            )
+        )
+        trs = inj.compile(["p"], [4])
+        assert [t.t for t in trs] == sorted(t.t for t in trs)
+        actions = [(t.t, t.action, t.instance) for t in trs]
+        # crash at 0.5 → recover (warm) at 1.5 → warm end at 2.0
+        assert (0.5, "crash", 1) in actions
+        assert (1.5, "recover", 1) in actions
+        assert (2.0, "slow_end", 1) in actions
+        assert (1.0, "oom", 2) in actions
+        assert (2.0, "slow", 0) in actions and (3.0, "slow_end", 0) in actions
+
+    def test_unknown_pool_rejected(self):
+        with pytest.raises(ValueError, match="unknown pool"):
+            FaultInjector((FaultSpec("crash", "nope"),)).compile(["p"], [4])
+
+    def test_instance_out_of_range_rejected(self):
+        with pytest.raises(ValueError, match="instance"):
+            FaultInjector((FaultSpec("crash", "p", instance=4),)).compile(["p"], [4])
+
+    def test_stochastic_seed_determinism(self):
+        kw = dict(horizon=10.0, rate=1.0)
+        a = FaultInjector.stochastic({"p": 4, "q": 2}, seed=5, **kw)
+        b = FaultInjector.stochastic({"p": 4, "q": 2}, seed=5, **kw)
+        c = FaultInjector.stochastic({"p": 4, "q": 2}, seed=6, **kw)
+        assert a.specs == b.specs
+        assert a.specs != c.specs
+        for s in a.specs:
+            assert s.pool in ("p", "q")
+            assert 0.0 <= s.t <= 10.0
+        # schedules compile against the target fleet without error
+        a.compile(["p", "q"], [4, 2])
+
+
+class TestRetryPolicy:
+    def test_backoff_doubles_then_caps(self):
+        pol = RetryPolicy(base_backoff=0.1, max_backoff=0.4, jitter=0.0)
+        assert [pol.backoff(7, a) for a in (1, 2, 3, 4)] == [0.1, 0.2, 0.4, 0.4]
+
+    def test_jitter_bounded_and_deterministic(self):
+        pol = RetryPolicy(base_backoff=0.1, max_backoff=10.0, jitter=0.5, seed=3)
+        for rid in range(20):
+            b = pol.backoff(rid, 1)
+            assert 0.1 <= b < 0.1 * 1.5
+            assert b == pol.backoff(rid, 1)  # pure function of (seed, rid, attempt)
+        # distinct requests get distinct jitter (hash actually mixes)
+        assert len({pol.backoff(rid, 1) for rid in range(20)}) > 10
+
+    def test_unit_hash_range(self):
+        us = [_unit_hash(0, i, 1) for i in range(100)]
+        assert all(0.0 <= u < 1.0 for u in us)
+
+    def test_invalid_policy_rejected(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_retries=-1)
+        with pytest.raises(ValueError):
+            RetryPolicy(base_backoff=0.5, max_backoff=0.1)
+
+
+class TestFleetFaults:
+    def test_crash_requeue_completes_everything(self):
+        """Re-queued in-flight work finishes: no losses, no failure records."""
+        trace = poisson_trace(300, rate=150.0, seed=1)
+        inj = FaultInjector(
+            (FaultSpec("crash", "p", instance=0, t=0.5, duration=0.25, requeue=True),)
+        )
+        sim, res = run_pool(trace, injector=inj)
+        assert res.instance_failures == 1
+        assert res.retries == res.timeouts == res.shed == 0
+        assert res.fail_records == []
+        pool, _ = all_tuples(sim, res)
+        assert len(pool) == len(trace)
+        assert not any(rejected for *_, rejected in pool)
+        assert res.availability < 1.0
+
+    def test_crash_lost_retries_recover(self):
+        trace = poisson_trace(300, rate=150.0, seed=1)
+        inj = FaultInjector(
+            (FaultSpec("crash", "p", instance=0, t=0.5, duration=0.25),)
+        )
+        pol = RetryPolicy(max_retries=3, base_backoff=2**-6, max_backoff=2**-3, jitter=0.0)
+        sim, res = run_pool(trace, injector=inj, policy=pol)
+        assert res.retries > 0
+        assert res.shed == 0 and res.timeouts == 0
+        pool, fails = all_tuples(sim, res)
+        assert len(pool) == len(trace) and fails == []
+        # retried requests keep their original arrival, so their TTFT spans
+        # the backoff — some first_token must land after the crash instant
+        retried_ttfts = [ft - arr for _, arr, ft, *_ in pool if ft > 0.5]
+        assert retried_ttfts and max(retried_ttfts) > 2**-6
+
+    def test_no_policy_sheds_lost_requests(self):
+        trace = poisson_trace(300, rate=150.0, seed=1)
+        inj = FaultInjector(
+            (FaultSpec("crash", "p", instance=0, t=0.5, duration=0.25),)
+        )
+        sim, res = run_pool(trace, injector=inj)
+        assert res.shed > 0
+        assert len(res.fail_records) == res.shed
+        assert all(r.pool == "fleet" and r.rejected for r in res.fail_records)
+        # every submitted request is accounted for exactly once
+        pool, fails = all_tuples(sim, res)
+        assert len(pool) + len(fails) == len(trace)
+
+    def test_retry_budget_exhaustion_sheds(self):
+        """Repeated crashes keep destroying the same requests' in-flight
+        work until their retry budgets run out (single pool — nowhere else
+        to go)."""
+        trace = poisson_trace(200, rate=400.0, seed=2)
+        inj = FaultInjector(
+            tuple(
+                FaultSpec("crash", "p", instance=0, t=0.25 + 0.25 * k, duration=0.125)
+                for k in range(8)
+            )
+        )
+        pol = RetryPolicy(max_retries=1, base_backoff=2**-8, max_backoff=2**-8, jitter=0.0)
+        _, res = run_pool(trace, instances=1, injector=inj, policy=pol)
+        assert res.retries > 0
+        assert res.shed > 0
+        assert len(res.fail_records) == res.shed
+
+    def test_timeout_deadline_drops(self):
+        trace = poisson_trace(300, rate=150.0, seed=1)
+        inj = FaultInjector(
+            (FaultSpec("crash", "p", instance=0, t=0.5, duration=0.5),)
+        )
+        pol = RetryPolicy(
+            max_retries=5, base_backoff=2**-2, max_backoff=2.0, jitter=0.0,
+            timeout=0.25,
+        )
+        _, res = run_pool(trace, injector=inj, policy=pol)
+        assert res.timeouts > 0
+        assert len(res.fail_records) == res.timeouts + res.shed
+
+    def test_oom_evicts_youngest_fraction(self):
+        trace = poisson_trace(300, rate=300.0, seed=4)
+        inj = FaultInjector(
+            (FaultSpec("oom", "p", instance=1, t=0.5, evict_frac=0.5, requeue=True),)
+        )
+        sim, res = run_pool(trace, injector=inj)
+        assert res.instance_failures == 1
+        pool, fails = all_tuples(sim, res)
+        assert len(pool) == len(trace) and fails == []
+        assert res.availability == 1.0  # instance survives an OOM kill
+
+    def test_slowdown_inflates_latency_only(self):
+        trace = poisson_trace(300, rate=150.0, seed=1)
+        _, base = run_pool(trace)
+        inj = FaultInjector(
+            (FaultSpec("slowdown", "p", instance=0, t=0.25, duration=1.0, factor=4.0),)
+        )
+        _, slow = run_pool(trace, injector=inj)
+        assert slow.summary.completed == base.summary.completed
+        assert slow.availability == 1.0
+        assert slow.summary.makespan > base.summary.makespan
+
+    def test_goodput(self):
+        trace = poisson_trace(200, rate=100.0, seed=6)
+        _, res = run_pool(trace)
+        s = res.summary
+        assert res.goodput() == pytest.approx((s.completed - s.truncated) / s.makespan)
+
+    def test_retry_policy_requires_injector(self):
+        with pytest.raises(ValueError, match="retry_policy"):
+            FleetSim({CFG.name: (CFG, 1)}, DYADIC, retry_policy=RetryPolicy())
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_fault_off_bit_identical(self, backend):
+        """`injector=None` and an empty injector take identical paths —
+        the ISSUE's guard-discipline acceptance criterion."""
+        trace = poisson_trace(400, rate=200.0, seed=7)
+        s0, r0 = run_pool(trace, backend=backend)
+        s1, r1 = run_pool(trace, backend=backend, injector=FaultInjector(()))
+        assert dataclasses.asdict(r0.summary) == dataclasses.asdict(r1.summary)
+        assert all_tuples(s0, r0) == all_tuples(s1, r1)
+        assert (r1.retries, r1.timeouts, r1.shed, r1.instance_failures) == (0, 0, 0, 0)
+        assert r1.availability == 1.0
+
+
+class TestHealthGatedRouting:
+    POOLS = {
+        "short": (PoolConfig("short", 4096, 16, queue_limit=64), 2),
+        "long": (PoolConfig("long", 16384, 8, queue_limit=64), 2),
+    }
+
+    def run_fleet_faults(self, trace, specs, policy=None, backend="reference", **kw):
+        sim = FleetSim(
+            dict(self.POOLS),
+            DYADIC,
+            b_short=2048,
+            backend=backend,
+            coalesce_dt=0.0,
+            injector=FaultInjector(specs, **kw),
+            retry_policy=policy,
+        )
+        return sim, sim.run(trace)
+
+    def test_all_down_pool_is_skipped(self):
+        """With every long-pool instance down, long-routed arrivals divert
+        to the short pool (nearest feasible) instead of queueing on a dead
+        pool — and return once the pool recovers."""
+        trace = poisson_trace(400, rate=200.0, seed=9)
+        specs = tuple(
+            FaultSpec("crash", "long", instance=i, t=0.25, duration=0.5, requeue=True)
+            for i in range(2)
+        )
+        sim, res = self.run_fleet_faults(trace, specs)
+        n_records = sum(len(p.records) for p in sim.pools.values())
+        assert n_records == len(trace) and res.fail_records == []
+        # diverted traffic shows up as spills off the dead pool
+        assert sim.router.spill_count > 0
+
+    def test_breaker_trips_and_recovers(self):
+        """Enough lost in-flight work inside the window trips the pool's
+        breaker; routing avoids it during cooldown (spills), then resumes."""
+        trace = poisson_trace(600, rate=300.0, seed=10)
+        specs = (
+            FaultSpec("crash", "long", instance=0, t=0.25, duration=0.125),
+            FaultSpec("crash", "long", instance=1, t=0.3125, duration=0.125),
+        )
+        pol = RetryPolicy(max_retries=3, base_backoff=2**-6, max_backoff=2**-4, jitter=0.0)
+        sim, res = self.run_fleet_faults(
+            trace, specs, policy=pol,
+            breaker_threshold=3, breaker_window=1.0, breaker_cooldown=0.25,
+        )
+        rt = sim._fault_rt
+        assert max(rt.failures) >= 3  # breaker had cause to trip
+        assert rt.is_open(1, 0.375)  # long pool open right after the losses
+        assert not rt.is_open(1, 10.0)  # half-open well past cooldown
+        n_records = sum(len(p.records) for p in sim.pools.values())
+        assert n_records + len(res.fail_records) == len(trace)
+
+    def test_blocked_frozenset_fast_path(self):
+        trace = poisson_trace(100, rate=100.0, seed=11)
+        sim, _ = self.run_fleet_faults(trace, ())
+        # no faults ever fired: blocked() must stay on the None fast path
+        assert sim._fault_rt.blocked(1e9) is None
+
+
+class TestTelemetryV2:
+    def test_v2_schema_with_health_columns(self):
+        trace = poisson_trace(300, rate=150.0, seed=1)
+        inj = FaultInjector(
+            (FaultSpec("crash", "p", instance=0, t=0.5, duration=1.0, requeue=True),)
+        )
+        _, res = run_pool(
+            trace, injector=inj, telemetry=TelemetryConfig(window=16)
+        )
+        doc = validate_telemetry(res.telemetry.to_dict())
+        assert doc["schema"] == "repro.obs/telemetry-v2"
+        cols = doc["columns"]
+        for name in ("retries", "timeouts", "down.p", "failures.p", "breaker_open.p"):
+            assert name in cols
+        # the crash window is visible in the down gauge
+        assert max(cols["down.p"]) == 1
+
+    def test_v1_schema_without_injector(self):
+        trace = poisson_trace(200, rate=150.0, seed=1)
+        _, res = run_pool(trace, telemetry=TelemetryConfig(window=64))
+        doc = validate_telemetry(res.telemetry.to_dict())
+        assert doc["schema"] == "repro.obs/telemetry-v1"
+        assert "retries" not in doc["columns"]
+
+    def test_run_fleet_wrapper_passes_faults(self):
+        trace = poisson_trace(200, rate=150.0, seed=1)
+        res = run_fleet(
+            trace,
+            {CFG.name: (CFG, 4)},
+            DYADIC,
+            injector=FaultInjector(
+                (FaultSpec("crash", "p", instance=0, t=0.5, duration=0.25, requeue=True),)
+            ),
+            retry_policy=RetryPolicy(),
+        )
+        assert res.instance_failures == 1

@@ -150,8 +150,10 @@ class TestEventTrace:
         assert thread_names == {0: "short", 1: "long", 2: "router"}
 
     def test_event_names_cover_all_kinds(self):
-        assert len(EVENT_NAMES) == 9
-        assert len(set(EVENT_NAMES)) == 9
+        assert len(EVENT_NAMES) == 14
+        assert len(set(EVENT_NAMES)) == 14
+        # Fault/recovery kinds appended in PR 7 — the prefix is append-only.
+        assert EVENT_NAMES[9:] == ("fail", "recover", "retry", "timeout", "shed")
 
 
 class TestValidators:

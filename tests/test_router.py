@@ -541,3 +541,147 @@ class TestPoolSetSetThresholds:
         alias = ps._thresholds  # the router's hot-path view
         ps.set_thresholds([1500])
         assert alias == [1500]
+
+
+class TestSaturatedSpillover:
+    """Nearest-feasible spillover when every pool is saturated, and the
+    exact-threshold boundary semantics the spill path must preserve."""
+
+    def _boundary_request(self, rid, budget, max_out=16):
+        # Cold-start conservative ratio is 4.0, so est = byte_len/4 + max_out
+        # exactly when byte_len is a multiple of 4.
+        return Request(
+            rid, byte_len=4 * (budget - max_out), max_output_tokens=max_out,
+            category=0,
+        )
+
+    def test_exact_threshold_boundary(self):
+        """est == B_short routes short (bisect_left); est == B_short + 1
+        routes long — locked on both sides of the boundary."""
+        r = make_router(b_short=8192)
+        at = r.route(self._boundary_request(0, 8192))
+        above = r.route(self._boundary_request(1, 8193))
+        assert at.estimated_total == 8192 and at.pool == "short"
+        assert above.estimated_total == 8193 and above.pool == "long"
+
+    def test_boundary_request_spills_when_short_saturated(self):
+        r = make_router(b_short=8192, queue_limit=2)
+        r.short.queue_depth = 100
+        d = r.route(self._boundary_request(0, 8192))
+        assert d.pool == "long" and d.spilled
+
+    def test_all_pools_saturated_stays_on_target(self):
+        """Degrade, don't drop: with every pool overloaded the request
+        stays on its static target and no spill is counted."""
+        r = make_router(queue_limit=2)
+        r.short.queue_depth = 100
+        r.long.queue_depth = 100_000
+        d = r.route(self._boundary_request(0, 4096))
+        assert d.pool == "short" and not d.spilled
+        assert r.spill_count == 0
+
+    def test_saturated_long_pool_never_spills_down_infeasible(self):
+        """A saturated long pool can't dump an over-budget request into the
+        short pool even when the short pool is idle."""
+        r = make_router(b_short=8192, queue_limit=2)
+        r.long.queue_depth = 100_000
+        d = r.route(self._boundary_request(0, 50_000))
+        assert d.pool == "long" and not d.spilled
+
+    def test_blocked_pool_with_saturated_alternative(self):
+        """Health-gating composes with saturation: a blocked short pool
+        evacuates to long even when long is overloaded-but-feasible is
+        false — nowhere healthy to go means stay on the original target."""
+        r = make_router(queue_limit=2)
+        req = self._boundary_request(0, 4096)
+        # blocked short, healthy long → evacuate
+        d = r.route(req, blocked=frozenset((0,)))
+        assert d.pool == "long" and d.spilled
+        # blocked short AND saturated long → degrade on the blocked target
+        r2 = make_router(queue_limit=2)
+        r2.long.queue_depth = 100_000
+        d2 = r2.route(req, blocked=frozenset((0,)))
+        assert d2.pool == "short" and not d2.spilled
+
+    def test_blocked_evacuates_even_without_spillover(self):
+        r = make_router(spillover=False)
+        d = r.route(self._boundary_request(0, 4096), blocked=frozenset((0,)))
+        assert d.pool == "long"
+
+
+class TestSaturatedSpilloverFleet:
+    """The saturation semantics above, end-to-end in BOTH DES backends."""
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_saturated_fleet_spills_and_degrades(self, backend):
+        """An undersized short pool under sustained pressure: spillover
+        fires, and once the long pool saturates too, requests degrade on
+        the short pool instead of being dropped."""
+        from repro.sim.fleet import FleetSim
+        from repro.sim.timing import TimingModel
+
+        dyadic = TimingModel(
+            "dyadic", w_base=2**-10, h_per_seq=2**-13, prefill_chunk=512
+        )
+        rng = np.random.default_rng(31)
+        arrivals = np.cumsum(rng.exponential(1.0 / 2000.0, 600))
+        trace = [
+            Request(
+                request_id=i,
+                byte_len=int(rng.integers(4, 8000)),
+                max_output_tokens=int(rng.integers(32, 256)),
+                category=0,
+                arrival_time=float(arrivals[i]),
+                true_input_tokens=int(rng.integers(16, 2000)),
+                true_output_tokens=int(rng.integers(32, 256)),
+            )
+            for i in range(600)
+        ]
+        pools = {
+            "short": (PoolConfig("short", 4096, 16, queue_limit=1), 1),
+            "long": (PoolConfig("long", 16384, 8, queue_limit=1), 1),
+        }
+        sim = FleetSim(
+            dict(pools), dyadic, b_short=2048, backend=backend, coalesce_dt=0.0
+        )
+        res = sim.run(trace)
+        assert sim.router.spill_count > 0  # spillover actually fired
+        n_records = sum(len(p.records) for p in sim.pools.values())
+        assert n_records == len(trace)  # degrade path drops nothing
+        assert sum(sim.router.routed.values()) == len(trace)
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_exact_boundary_routing_in_fleet(self, backend):
+        """Budgets exactly at / one past B_short land on opposite sides of
+        the boundary in both backends (cold-start calibrator: all requests
+        arrive before any completion can update the EMA)."""
+        from repro.sim.fleet import FleetSim
+        from repro.sim.timing import TimingModel
+
+        dyadic = TimingModel(
+            "dyadic", w_base=2**-10, h_per_seq=2**-13, prefill_chunk=512
+        )
+        b = 2048
+        trace = []
+        for i in range(8):
+            budget = b if i % 2 == 0 else b + 1
+            trace.append(
+                Request(
+                    request_id=i,
+                    byte_len=4 * (budget - 16),
+                    max_output_tokens=16,
+                    category=0,
+                    arrival_time=i * 2**-10,  # all before the first completion
+                    true_input_tokens=64,
+                    true_output_tokens=8,
+                )
+            )
+        pools = {
+            "short": (PoolConfig("short", 4096, 16, queue_limit=64), 2),
+            "long": (PoolConfig("long", 16384, 8, queue_limit=64), 2),
+        }
+        sim = FleetSim(
+            dict(pools), dyadic, b_short=b, backend=backend, coalesce_dt=0.0
+        )
+        sim.run(trace)
+        assert sim.router.routed == {"short": 4, "long": 4}

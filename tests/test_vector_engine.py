@@ -634,3 +634,148 @@ class TestTelemetryEquivalence:
         ev = [e for e in tel.events.events() if e["kind"] == "threshold_move"]
         assert len(ev) == len(ctrl.history)
         assert all(e["pool"] == "router" for e in ev)
+
+
+class TestFaultEquivalence:
+    """Fault semantics are backend-invariant (PR 7 acceptance classes).
+
+    Single pool + dyadic timing + ``coalesce_dt=0`` keeps fault application
+    bit-exact: identical SimSummary fields, fault counters, availability,
+    per-request pool records, and fleet-level failure records for every
+    fault kind and recovery path.
+    """
+
+    def _run(self, trace, backend, specs, policy=None, instances=4):
+        from repro.sim.faults import FaultInjector
+
+        cfg = PoolConfig("p", 4096, 16)
+        sim = FleetSim(
+            {cfg.name: (cfg, instances)},
+            DYADIC,
+            backend=backend,
+            coalesce_dt=0.0,
+            injector=FaultInjector(specs),
+            retry_policy=policy,
+        )
+        return sim, sim.run(trace)
+
+    def _assert_equal(self, trace, specs, policy=None, instances=4):
+        ref_sim, ref = self._run(trace, "reference", specs, policy, instances)
+        vec_sim, vec = self._run(trace, "vectorized", specs, policy, instances)
+        for f in SUMMARY_FIELDS:
+            assert getattr(ref.summary, f) == getattr(vec.summary, f), f
+        for f in ("retries", "timeouts", "shed", "instance_failures"):
+            assert getattr(ref, f) == getattr(vec, f), f
+        assert ref.availability == vec.availability
+        ref_pool = sorted(
+            (r.request_id, r.arrival, r.first_token, r.finish,
+             r.output_tokens, r.preemptions, r.truncated, r.rejected)
+            for p in ref_sim.pools.values() for r in p.records
+        )
+        vec_pool = sorted(
+            (r.request_id, r.arrival, r.first_token, r.finish,
+             r.output_tokens, r.preemptions, r.truncated, r.rejected)
+            for p in vec_sim.pools.values() for r in p.records
+        )
+        assert ref_pool == vec_pool
+        ref_fail = sorted((r.request_id, r.arrival, r.finish) for r in ref.fail_records)
+        vec_fail = sorted((r.request_id, r.arrival, r.finish) for r in vec.fail_records)
+        assert ref_fail == vec_fail
+        return ref, vec
+
+    def test_crash_requeue(self):
+        from repro.sim.faults import FaultSpec
+
+        trace = poisson_trace(500, rate=250.0, seed=21)
+        ref, _ = self._assert_equal(
+            trace,
+            (FaultSpec("crash", "p", instance=1, t=0.5, duration=0.25, requeue=True),),
+        )
+        assert ref.instance_failures == 1 and ref.availability < 1.0
+
+    def test_crash_lost_with_retries(self):
+        from repro.sim.faults import FaultSpec, RetryPolicy
+
+        trace = poisson_trace(500, rate=250.0, seed=22)
+        pol = RetryPolicy(
+            max_retries=3, base_backoff=2**-6, max_backoff=2**-3, jitter=0.25, seed=1
+        )
+        ref, _ = self._assert_equal(
+            trace,
+            (FaultSpec("crash", "p", instance=0, t=0.5, duration=0.25),),
+            policy=pol,
+        )
+        assert ref.retries > 0
+
+    def test_crash_with_warmup_degradation(self):
+        from repro.sim.faults import FaultSpec
+
+        trace = poisson_trace(500, rate=250.0, seed=23)
+        self._assert_equal(
+            trace,
+            (
+                FaultSpec(
+                    "crash", "p", instance=2, t=0.5, duration=0.25,
+                    requeue=True, warmup=0.25, warmup_factor=2.0,
+                ),
+            ),
+        )
+
+    def test_oom_kill_both_dispositions(self):
+        from repro.sim.faults import FaultSpec, RetryPolicy
+
+        trace = poisson_trace(500, rate=300.0, seed=24)
+        self._assert_equal(
+            trace,
+            (FaultSpec("oom", "p", instance=1, t=0.5, evict_frac=0.5, requeue=True),),
+        )
+        pol = RetryPolicy(max_retries=2, base_backoff=2**-6, max_backoff=2**-4, jitter=0.0)
+        ref, _ = self._assert_equal(
+            trace,
+            (FaultSpec("oom", "p", instance=1, t=0.5, evict_frac=0.75),),
+            policy=pol,
+        )
+        assert ref.retries > 0
+
+    def test_slowdown_dyadic_factor(self):
+        from repro.sim.faults import FaultSpec
+
+        trace = poisson_trace(500, rate=250.0, seed=25)
+        # dyadic factors keep t_iter * factor an exact binary float in both
+        # the scalar multiply and the masked vector multiply
+        for factor in (2.0, 1.5):
+            self._assert_equal(
+                trace,
+                (FaultSpec("slowdown", "p", instance=0, t=0.25, duration=0.5,
+                           factor=factor),),
+            )
+
+    def test_timeout_drops(self):
+        from repro.sim.faults import FaultSpec, RetryPolicy
+
+        trace = poisson_trace(400, rate=200.0, seed=26)
+        pol = RetryPolicy(
+            max_retries=5, base_backoff=2**-2, max_backoff=2.0, jitter=0.0,
+            timeout=0.25,
+        )
+        ref, _ = self._assert_equal(
+            trace,
+            (FaultSpec("crash", "p", instance=0, t=0.5, duration=0.5),),
+            policy=pol,
+        )
+        assert ref.timeouts > 0 and len(ref.fail_records) == ref.timeouts
+
+    def test_overlapping_fault_storm(self):
+        """Several faults on several instances, interleaved in time."""
+        from repro.sim.faults import FaultSpec, RetryPolicy
+
+        trace = poisson_trace(600, rate=300.0, seed=27)
+        specs = (
+            FaultSpec("crash", "p", instance=0, t=0.25, duration=0.25),
+            FaultSpec("slowdown", "p", instance=1, t=0.375, duration=0.25, factor=2.0),
+            FaultSpec("oom", "p", instance=2, t=0.5, evict_frac=0.5, requeue=True),
+            FaultSpec("crash", "p", instance=3, t=0.625, duration=0.125, requeue=True),
+        )
+        pol = RetryPolicy(max_retries=2, base_backoff=2**-6, max_backoff=2**-4, jitter=0.5, seed=9)
+        ref, _ = self._assert_equal(trace, specs, policy=pol)
+        assert ref.instance_failures == 3
