@@ -4,8 +4,11 @@ The paper's §7 proposes error-driven threshold discovery and §8 prescribes
 monitoring preemption pressure. This benchmark drives the first-class
 :class:`~repro.core.adaptive.AdaptiveController` — plugged into
 ``FleetSim(controller=..., control_window=...)``, no monkeypatching — over
-three nonstationary scenarios, each static-vs-adaptive, all through the
-vectorized backend:
+three nonstationary scenarios, each static-vs-adaptive, through the
+vectorized backend by default (``--backend jax`` runs the compiled tier's
+in-step controller mirror instead). ``--tune-gains`` additionally sweeps
+the controller's AIMD gains per scenario as one vmapped
+:func:`repro.sim.run_fleet_grid` call (see :func:`tune_gains`):
 
 * ``incident`` — the short pool is undersized to 60% of its designed fleet
   (a realistic capacity incident) under stationary arrivals. With a static
@@ -43,12 +46,20 @@ from benchmarks.common import emit
 from repro.core.adaptive import AdaptiveController
 from repro.core.pools import PoolConfig, n_seq_for_cmax
 from repro.obs import TelemetryConfig
-from repro.sim import A100_LLAMA3_70B, FleetSim, plan_fleet
+from repro.sim import A100_LLAMA3_70B, FleetSim, plan_fleet, run_fleet_grid
 from repro.traces import TraceSpec, generate_trace_columns
 
 
 #: Valid scenario names, in run order.
 SCENARIO_NAMES = ("incident", "surge", "drift")
+
+#: AIMD gain grid for ``--tune-gains``: decrease factor × increase step,
+#: every combination one vmapped lane (plus an uncontrolled baseline).
+GAIN_GRID: tuple[Optional[dict], ...] = (None,) + tuple(
+    {"decrease_factor": f, "increase_step": s}
+    for f in (0.5, 0.625, 0.75, 0.875)
+    for s in (256, 512, 1024)
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +205,56 @@ def _emit_telemetry_rows(
     )
 
 
+def tune_gains(
+    sc: Scenario,
+    *,
+    grid: tuple = GAIN_GRID,
+    control_window: int = 200,
+) -> dict:
+    """Sweep AIMD controller gains for one scenario as a single vmapped grid.
+
+    Every gain combination (and an uncontrolled baseline lane) runs as one
+    :func:`repro.sim.run_fleet_grid` call on the compiled jax tier — the
+    in-step controller mirror makes gains an honest vmap axis. Lanes are
+    scored by composite error count (rejections + truncations +
+    preemptions, the §8 contract) with P99 TTFT as the tiebreaker; the
+    winner and the baseline are emitted for comparison.
+    """
+    cols = generate_trace_columns(sc.spec)
+    pools = build_pools(cols, sc.spec.rate, sc.short_scale)
+    t0 = time.perf_counter()
+    res = run_fleet_grid(
+        cols,
+        pools,
+        A100_LLAMA3_70B,
+        gains=list(grid),
+        control_window=control_window,
+    )
+    wall = (time.perf_counter() - t0) * 1e6
+    errs = res.rejected + res.truncated + res.preemptions
+    controlled = [i for i, gn in enumerate(grid) if gn is not None]
+    best = min(controlled, key=lambda i: (errs[i], res.ttft_p99[i]))
+    base = next(i for i, gn in enumerate(grid) if gn is None)
+    gn = grid[best]
+    emit(
+        f"beyond/adaptive/{sc.name}/gain_tuning",
+        wall,
+        f"lanes={len(grid)};best_factor={gn['decrease_factor']};"
+        f"best_step={gn['increase_step']};best_errs={errs[best]};"
+        f"best_ttft_p99={res.ttft_p99[best]:.2f};"
+        f"best_final_b={res.final_thresholds[best][0]};"
+        f"best_moves={res.controller_moves[best]};"
+        f"baseline_errs={errs[base]};"
+        f"baseline_ttft_p99={res.ttft_p99[base]:.2f}",
+    )
+    return {
+        "grid": res,
+        "best": gn,
+        "best_errors": int(errs[best]),
+        "baseline_errors": int(errs[base]),
+    }
+
+
 def run_scenarios(
     num_requests: int,
     rate: float,
@@ -201,6 +262,7 @@ def run_scenarios(
     *,
     backend: str = "vectorized",
     only: Optional[list[str]] = None,
+    tune: bool = False,
 ) -> dict:
     """Run the selected scenarios; unknown names are an error, never a
     silent no-op (the CI smoke depends on actually exercising the loop)."""
@@ -210,11 +272,14 @@ def run_scenarios(
         raise ValueError(
             f"unknown scenarios {unknown}; expected a subset of {SCENARIO_NAMES}"
         )
-    return {
-        sc.name: run_scenario(sc, backend=backend)
-        for sc in scenarios(num_requests, rate, seed)
-        if sc.name in names
-    }
+    out = {}
+    for sc in scenarios(num_requests, rate, seed):
+        if sc.name not in names:
+            continue
+        out[sc.name] = run_scenario(sc, backend=backend)
+        if tune:
+            out[sc.name]["tuning"] = tune_gains(sc)
+    return out
 
 
 def run(
@@ -236,15 +301,19 @@ def main() -> None:
                     help="arrival rate (default: requests/10 → 10 s trace)")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--backend", default="vectorized",
-                    choices=("reference", "vectorized"))
+                    choices=("reference", "vectorized", "jax"))
     ap.add_argument("--scenarios", nargs="+", default=None,
                     choices=SCENARIO_NAMES,
                     help="subset of scenarios to run (default: all)")
+    ap.add_argument("--tune-gains", action="store_true",
+                    help="also sweep AIMD controller gains per scenario as "
+                    "one vmapped run_fleet_grid call")
     args = ap.parse_args()
     rate = args.rate if args.rate is not None else args.requests / 10.0
     run_scenarios(
         args.requests, rate, args.seed,
         backend=args.backend, only=args.scenarios,
+        tune=args.tune_gains,
     )
 
 

@@ -15,7 +15,10 @@ diminishing returns but gives no numbers. Two layers, per trace:
   over a uniform fleet-scaling factor finds the smallest
   analytically-proportioned fleet that still completes every request and
   meets the SLO, so the marginal savings of each added pool come out of
-  the DES rather than arithmetic.
+  the DES rather than arithmetic. ``--grid`` swaps the serial bisection
+  for :func:`minimal_sim_fleet_grid`, which probes the whole multiplier
+  ladder as ONE vmapped ``run_fleet_grid`` call on the compiled jax tier
+  (rows under ``sim_grid/`` — spillover off, full-run metrics).
 """
 
 from __future__ import annotations
@@ -35,6 +38,7 @@ from repro.sim import (
     PoolProfile,
     SLOTarget,
     profile_pool,
+    run_fleet_grid,
 )
 from repro.sim.profiler import HEADROOM
 from repro.traces import TraceColumns, TraceSpec, generate_trace_columns
@@ -192,11 +196,82 @@ def minimal_sim_fleet(
     return total, analytic_total, best_res, _passes(best_res)
 
 
+#: Uniform fleet-scaling multipliers probed by the grid fast path — the
+#: serial bisection's 0.5–1.6 search interval at its terminal resolution,
+#: evaluated all at once instead of one DES run per probe.
+GRID_MULTIPLIERS = (0.5, 0.625, 0.75, 0.875, 1.0, 1.2, 1.44, 1.6)
+
+
+def minimal_sim_fleet_grid(
+    cols: TraceColumns,
+    n_pools: int,
+    rate: float,
+    *,
+    slo: SLOTarget = PAPER_SLO,
+    multipliers: tuple[float, ...] = GRID_MULTIPLIERS,
+) -> tuple[int, int, dict, bool]:
+    """Grid fast path for :func:`minimal_sim_fleet`: one vmapped ladder.
+
+    Evaluates the whole multiplier ladder as a single
+    :func:`repro.sim.run_fleet_grid` call (``instances`` axis, dead-lane
+    padding) and picks the smallest lane that completes every request and
+    meets the latency SLO. Semantics differ from the serial bisection in
+    the jax tier's documented ways — spillover off, full-run metrics with
+    no warmup discard — so its rows are emitted under ``sim_grid/`` rather
+    than replacing the ``sim/`` series. Returns
+    ``(sim_instances, analytic_instances, lane_metrics, slo_met)``.
+    """
+    profiles = analytic_profiles(cols, n_pools, rate, cols.true_total)
+    base = [max(1, p.instances) for p in profiles]
+    analytic_total = sum(p.instances for p in profiles)
+    cfgs = pool_configs(n_pools)
+    pools = {cfg.name: (cfg, b) for cfg, b in zip(cfgs, base)}
+    inst_axis = [
+        [max(1, math.ceil(b * m)) for b in base] for m in multipliers
+    ]
+    th = thresholds_for(n_pools)
+    grid = run_fleet_grid(
+        cols,
+        pools,
+        A100_LLAMA3_70B,
+        thresholds=[list(th)] if th else None,
+        instances=inst_axis,
+    )
+    n = len(cols)
+    passes = (
+        (grid.completed == n)
+        & (grid.truncated == 0)
+        & (grid.ttft_p99 <= slo.ttft_p99)
+        & (grid.tpot_p99 <= slo.tpot_p99)
+    )
+    totals = grid.instances.sum(axis=1)
+    if passes.any():
+        # Smallest passing fleet (the ladder is capacity-ordered).
+        k = int(np.flatnonzero(passes)[0])
+        slo_met = True
+    else:
+        k = len(multipliers) - 1  # unmet lower bound, like the serial path
+        slo_met = False
+    lane = {
+        "completed": int(grid.completed[k]),
+        "rejected": int(grid.rejected[k]),
+        "ttft_p99": float(grid.ttft_p99[k]),
+        "tpot_p99": float(grid.tpot_p99[k]),
+        "preemptions": int(grid.preemptions[k]),
+        "routed": {
+            name: int(v) for name, v in zip(grid.pool_names, grid.routed[k])
+        },
+    }
+    return int(totals[k]), analytic_total, lane, slo_met
+
+
 def run(
     num_requests: int = 4000,
     rate: float = 40.0,
     seed: int = 42,
     slo: SLOTarget = PAPER_SLO,
+    *,
+    use_grid: bool = False,
 ) -> dict:
     """Measure the 1/2/3-pool comparison at a ~100 s arrival span.
 
@@ -239,6 +314,25 @@ def run(
         all_met = True
         for n_pools in (1, 2, 3):
             t0 = time.perf_counter()
+            if use_grid:
+                g_sim, g_analytic, lane, slo_met = minimal_sim_fleet_grid(
+                    cols, n_pools, rate, slo=slo
+                )
+                wall = (time.perf_counter() - t0) * 1e6
+                sim_fleet[n_pools] = g_sim
+                all_met &= slo_met
+                routed = ";".join(
+                    f"{k}={v}" for k, v in lane["routed"].items()
+                )
+                emit(
+                    f"beyond/threepool/{trace}/sim_grid/{n_pools}pool",
+                    wall,
+                    f"sim_instances={g_sim};analytic_instances={g_analytic};"
+                    f"completed={lane['completed']};"
+                    f"ttft_p99={lane['ttft_p99']:.3f};"
+                    f"slo_met={slo_met};preempt={lane['preemptions']};{routed}",
+                )
+                continue
             g_sim, g_analytic, res, slo_met = minimal_sim_fleet(
                 cols, n_pools, rate, slo=slo
             )
@@ -272,5 +366,22 @@ def run(
     return out
 
 
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=4000)
+    ap.add_argument("--rate", type=float, default=40.0)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument(
+        "--grid",
+        action="store_true",
+        help="use the vmapped run_fleet_grid multiplier ladder instead of "
+        "the serial DES bisection (jax-tier semantics; rows under sim_grid/)",
+    )
+    args = ap.parse_args()
+    run(args.requests, args.rate, args.seed, use_grid=args.grid)
+
+
 if __name__ == "__main__":
-    run()
+    main()

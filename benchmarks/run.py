@@ -18,7 +18,8 @@ Modules:
   chaos               — §4.3 isolation under injected instance faults
   dispatch_overhead   — §2.2 O(1) sub-microsecond dispatch
   roofline            — §Roofline table from dry-run records
-  sim_throughput      — reference vs vectorized DES backend speedup
+  sim_throughput      — reference/vectorized/jax DES backend speedups
+                        + vmapped run_fleet_grid sweep vs serial loop
   telemetry_smoke     — repro.obs telemetry schema + zero-overhead checks
 
 Exits non-zero when any module fails (CI gates on this).

@@ -1,19 +1,30 @@
-"""Simulator throughput: reference vs vectorized backend (this repo's DES).
+"""Simulator throughput: reference vs vectorized vs jax backends (this DES).
 
 Measures *simulated requests per second of wall-clock* for the scalar
-reference engine (`repro.sim.engine`) and the struct-of-arrays vectorized
-engine (`repro.sim.vector_engine`) on identically-seeded Azure traces at the
+reference engine (`repro.sim.engine`), the struct-of-arrays vectorized
+engine (`repro.sim.vector_engine`), and the fully compiled jax engine
+(`repro.sim.jax_engine`) on identically-seeded Azure traces at the
 paper's operating point (rate scaled with trace size so the fleet shape
 stays representative). The headline `derived` column reports the speedup —
 the repo's acceptance bar is ≥10× at the 100k-request scale (measured:
 reference 1896 s vs vectorized 33 s ≈ 57× on a 2-core container, with
 matching ttft_p99 between the backends).
 
-The vectorized backend is fed the trace in its native columnar form
-(:class:`~repro.traces.generator.TraceColumns`, straight from
+The vectorized and jax backends are fed the trace in its native columnar
+form (:class:`~repro.traces.generator.TraceColumns`, straight from
 ``generate_trace_columns``); the reference backend gets the materialized
 ``Request`` objects. ``--pools 3`` swaps the classic short/long pair for
 the 4K/16K/64K three-pool topology, exercising the N-way routing path.
+When ``jax`` is among the backends all backends run with spillover off
+(the jax tier simulates static N-way routing only), and the one-off XLA
+compile is reported as a separate ``jax_compile`` row so the steady-state
+``us_per_call`` stays comparable.
+
+``--grid G`` benchmarks the batched sensitivity-sweep API
+(:func:`repro.sim.run_fleet_grid`): one vmapped G-lane threshold sweep
+against the serial vectorized loop over the same G thresholds. The repo's
+acceptance bar is ≥5× steady-state at G=16 (measured: serial 20.7 s vs
+grid 3.6 s ≈ 5.7× on a 1-core container).
 
 CLI::
 
@@ -21,6 +32,8 @@ CLI::
     python -m benchmarks.sim_throughput --requests 1000   # CI smoke
     python -m benchmarks.sim_throughput --requests 1000 --pools 3 \
         --backends vectorized                             # N-pool smoke
+    python -m benchmarks.sim_throughput --requests 1000 \
+        --backends vectorized,jax --grid 16               # jax tier + sweep
     python -m benchmarks.sim_throughput --requests 1000000 \
         --backends vectorized                             # 1M, vector only
 
@@ -34,6 +47,8 @@ from __future__ import annotations
 import argparse
 import time
 
+import numpy as np
+
 from benchmarks.beyond_paper_threepool import (
     analytic_profiles,
     pool_configs,
@@ -42,7 +57,7 @@ from benchmarks.beyond_paper_threepool import (
 from benchmarks.common import emit, write_json
 from repro.core.pools import PoolConfig, n_seq_for_cmax
 from repro.obs import TelemetryConfig
-from repro.sim import A100_LLAMA3_70B, plan_fleet, run_fleet
+from repro.sim import A100_LLAMA3_70B, plan_fleet, run_fleet, run_fleet_grid
 from repro.traces import TraceSpec, generate_trace_columns
 
 #: Arrival rate per 10k trace requests — keeps sim duration ≈ 100 s and the
@@ -80,14 +95,22 @@ def bench_scale(
     warmup: bool = True,
     n_pools: int = 2,
 ) -> dict[str, float]:
-    """Run one trace size through each backend; returns wall seconds each."""
+    """Run one trace size through each backend; returns wall seconds each.
+
+    The jax backend is timed twice — the first call pays the one-off XLA
+    compile (emitted as a separate ``jax_compile`` row) and the second
+    gives the steady-state wall that the headline row reports. When jax
+    participates, every backend runs with spillover off so the rows stay
+    like-for-like (the compiled engine simulates static N-way routing).
+    """
     rate = max(50.0, RATE_PER_10K * num_requests / 10_000)
     cols = generate_trace_columns(
         TraceSpec(trace="azure", num_requests=num_requests, rate=rate, seed=seed)
     )
     pools, thresholds = build_pools(cols, rate, n_pools)
+    spillover = "jax" not in backends
     # Materialize objects once, outside the timing, for the reference
-    # backend; the vectorized backend consumes the columns natively.
+    # backend; the vectorized and jax backends consume the columns natively.
     reqs = cols.to_requests() if "reference" in backends else None
 
     if warmup and "vectorized" in backends:
@@ -101,17 +124,41 @@ def bench_scale(
             A100_LLAMA3_70B,
             backend="vectorized",
             thresholds=thresholds,
+            spillover=spillover,
         )
 
     tag = "" if n_pools == 2 else f"/pools={n_pools}"
     walls: dict[str, float] = {}
     for backend in backends:
-        trace = cols if backend == "vectorized" else reqs
+        trace = reqs if backend == "reference" else cols
         t0 = time.perf_counter()
         res = run_fleet(
-            trace, pools, A100_LLAMA3_70B, backend=backend, thresholds=thresholds
+            trace,
+            pools,
+            A100_LLAMA3_70B,
+            backend=backend,
+            thresholds=thresholds,
+            spillover=spillover,
         )
         wall = time.perf_counter() - t0
+        if backend == "jax":
+            # First call above compiled + ran; report it separately and
+            # time a second, cache-hit call for the steady-state row.
+            emit(
+                f"sim_throughput/jax_compile/n={num_requests}{tag}",
+                wall * 1e6,
+                "first-call wall: XLA trace+compile+run",
+            )
+            t0 = time.perf_counter()
+            res = run_fleet(
+                trace,
+                pools,
+                A100_LLAMA3_70B,
+                backend=backend,
+                thresholds=thresholds,
+                spillover=spillover,
+            )
+            wall = time.perf_counter() - t0
         walls[backend] = wall
         emit(
             f"sim_throughput/{backend}/n={num_requests}{tag}",
@@ -126,7 +173,100 @@ def bench_scale(
             0.0,
             f"x{walls['reference'] / walls['vectorized']:.1f}",
         )
+    if "vectorized" in walls and "jax" in walls:
+        emit(
+            f"sim_throughput/jax_speedup/n={num_requests}{tag}",
+            0.0,
+            f"x{walls['vectorized'] / walls['jax']:.1f}",
+        )
     return walls
+
+
+def bench_grid_speedup(
+    grid_points: int = 16, num_requests: int = 800, *, seed: int = 42
+) -> dict[str, float]:
+    """Vmapped threshold sweep (`run_fleet_grid`) vs the serial vectorized loop.
+
+    One short/long fleet with the long pool overcommitted vLLM-style
+    (``n_seq × blocks_for(c_max) > total_blocks``), swept over
+    ``grid_points`` routing thresholds between 512 and 8192 tokens — the
+    fig6 sensitivity shape. The serial baseline runs the vectorized
+    backend once per threshold (spillover off, matching the grid
+    semantics); the grid runs all lanes as one vmapped device
+    computation. Compile wall (first call) is emitted separately; the
+    ``grid_speedup`` row is serial over steady-state and the acceptance
+    bar is ≥5× at G=16 (measured 5.7× on a 1-core container: serial
+    20.7 s vs grid 3.6 s at the 800-request default).
+    """
+    rate = 40.0 * num_requests / 1000
+    cols = generate_trace_columns(
+        TraceSpec(trace="azure", num_requests=num_requests, rate=rate, seed=seed)
+    )
+    pools = {
+        "short": (PoolConfig("short", 8192, 24, headroom=1.05), 1),
+        "long": (PoolConfig("long", 65_536, 20, headroom=1.02), 1),
+    }
+    thresholds = [[int(b)] for b in np.linspace(512, 8192, grid_points)]
+
+    # Warm the routing/calibration kernels outside the serial timing.
+    run_fleet(
+        cols,
+        pools,
+        A100_LLAMA3_70B,
+        backend="vectorized",
+        thresholds=thresholds[0],
+        spillover=False,
+    )
+    t0 = time.perf_counter()
+    serial = [
+        run_fleet(
+            cols,
+            pools,
+            A100_LLAMA3_70B,
+            backend="vectorized",
+            thresholds=th,
+            spillover=False,
+        )
+        for th in thresholds
+    ]
+    serial_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    run_fleet_grid(cols, pools, A100_LLAMA3_70B, thresholds=thresholds)
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    grid = run_fleet_grid(cols, pools, A100_LLAMA3_70B, thresholds=thresholds)
+    steady_wall = time.perf_counter() - t0
+
+    g = grid_points
+    emit(
+        f"sim_throughput/grid/serial_vectorized/g={g}",
+        serial_wall * 1e6,
+        f"n={num_requests};per_lane_s={serial_wall / g:.2f};"
+        f"completed={sum(r.summary.completed for r in serial)}",
+    )
+    emit(
+        f"sim_throughput/grid/jax_compile/g={g}",
+        compile_wall * 1e6,
+        "first-call wall: XLA trace+compile+run",
+    )
+    emit(
+        f"sim_throughput/grid/jax_steady/g={g}",
+        steady_wall * 1e6,
+        f"n={num_requests};per_lane_s={steady_wall / g:.2f};"
+        f"completed={int(grid.completed.sum())}",
+    )
+    emit(
+        f"sim_throughput/grid_speedup/g={g}",
+        0.0,
+        f"x{serial_wall / steady_wall:.1f};"
+        f"incl_compile_x{serial_wall / compile_wall:.1f}",
+    )
+    return {
+        "serial": serial_wall,
+        "compile": compile_wall,
+        "steady": steady_wall,
+    }
 
 
 def bench_telemetry_overhead(
@@ -192,16 +332,20 @@ def bench_telemetry_overhead(
 def run() -> None:
     """Aggregate-suite entry (`python -m benchmarks.run`).
 
-    Both backends at 10k; vectorized-only at 100k (the reference backend
-    needs ~30 min there — run it explicitly via the CLI when you want the
-    full-scale speedup number); a 10k three-pool vectorized run covers the
-    N-way routing path, and a telemetry on/off comparison quantifies the
-    observability overhead.
+    Both host backends at 10k; vectorized-only at 100k (the reference
+    backend needs ~30 min there — run it explicitly via the CLI when you
+    want the full-scale speedup number); a 10k three-pool vectorized run
+    covers the N-way routing path, a telemetry on/off comparison
+    quantifies the observability overhead, a vectorized-vs-jax pair at 1k
+    tracks the compiled single-fleet tier (compile time separate), and
+    the 16-point grid sweep tracks the vmapped-sensitivity speedup bar.
     """
     bench_scale(10_000)
     bench_scale(10_000, ("vectorized",), n_pools=3)
     bench_scale(100_000, ("vectorized",))
     bench_telemetry_overhead(10_000)
+    bench_scale(1_000, ("vectorized", "jax"))
+    bench_grid_speedup(16)
 
 
 def main() -> None:
@@ -217,8 +361,8 @@ def main() -> None:
         "--backends",
         type=str,
         default=None,
-        help="comma-separated subset of reference,vectorized "
-        "(default: both, vectorized-only at ≥1M)",
+        help="comma-separated subset of reference,vectorized,jax "
+        "(default: reference,vectorized; vectorized-only at ≥1M)",
     )
     parser.add_argument(
         "--pools",
@@ -232,6 +376,14 @@ def main() -> None:
         "--telemetry-overhead",
         action="store_true",
         help="also benchmark telemetry off/sampling/tracing at each size",
+    )
+    parser.add_argument(
+        "--grid",
+        type=int,
+        default=0,
+        metavar="G",
+        help="also benchmark a G-point run_fleet_grid threshold sweep "
+        "against the serial vectorized loop (acceptance bar: ≥5× at G=16)",
     )
     parser.add_argument(
         "--json",
@@ -250,6 +402,8 @@ def main() -> None:
         bench_scale(n, backends, seed=args.seed, n_pools=args.pools)
         if args.telemetry_overhead:
             bench_telemetry_overhead(n, seed=args.seed)
+    if args.grid:
+        bench_grid_speedup(args.grid, seed=args.seed)
     if args.json:
         write_json(args.json)
 

@@ -40,6 +40,30 @@ DEFAULT_BETA = 0.95
 DEFAULT_GAMMA = 1.0
 _MIN_RATIO = 0.25  # bytes/token can't go below 1 byte / 4 tokens in practice
 
+# ---------------------------------------------------------------------------
+# Kernel specialization registry
+# ---------------------------------------------------------------------------
+# The routing / calibration hot path calls the same jitted kernels once per
+# routing epoch and once per control window — millions of times across a
+# sensitivity grid. Specializations are cached by an explicit key (e.g.
+# ``("route", P, dtype)``) via ``functools.lru_cache`` factories so repeated
+# calls reuse one compiled object, and each factory bumps a trace counter at
+# *trace time* (the Python body of a jitted function runs only while
+# tracing), which the test suite uses to prove per-epoch calls stop
+# retracing.
+
+_KERNEL_TRACES: dict[tuple, int] = {}
+
+
+def _count_trace(key: tuple) -> None:
+    """Record one tracing of the kernel registered under ``key``."""
+    _KERNEL_TRACES[key] = _KERNEL_TRACES.get(key, 0) + 1
+
+
+def kernel_trace_counts() -> dict[tuple, int]:
+    """Snapshot of {kernel key: number of times JAX traced it}."""
+    return dict(_KERNEL_TRACES)
+
 
 @dataclasses.dataclass
 class EmaCalibrator:
@@ -135,6 +159,7 @@ class EmaCalibrator:
         n = int(byte_lens.shape[0])
         if n == 0:
             return
+        kernel = _update_stream_kernel(chunk, float(self.beta))
         state = self.to_state()
         for lo in range(0, n, chunk):
             b = byte_lens[lo : lo + chunk]
@@ -145,7 +170,7 @@ class EmaCalibrator:
                 b = jnp.pad(b, (0, pad))
                 p = jnp.pad(p, (0, pad))  # prompt_tokens=0 → skipped
                 k = jnp.pad(k, (0, pad))
-            state = jax_update_stream(state, b, p, k, beta=self.beta)
+            state = kernel(state, b, p, k)
         self.load_state(state)
 
 
@@ -227,6 +252,37 @@ def jax_update_stream(
 
     final, _ = jax.lax.scan(step, state, (byte_lens, prompt_tokens, categories))
     return final
+
+
+@functools.lru_cache(maxsize=None)
+def _update_stream_kernel(chunk: int, beta: float):
+    """Cached jitted EMA-stream fold, specialized per ``(chunk, beta)``.
+
+    One compiled object per key serves every epoch / control window of a
+    run (``observe_batch`` always pads to a fixed ``chunk``), so repeated
+    feedback folds hit the XLA executable directly. The trace counter in
+    :func:`kernel_trace_counts` proves it.
+    """
+    key = ("observe", chunk, beta)
+
+    def fold(
+        state: CalibState,
+        byte_lens: jax.Array,
+        prompt_tokens: jax.Array,
+        categories: jax.Array,
+    ) -> CalibState:
+        _count_trace(key)  # runs at trace time only
+
+        def step(carry: CalibState, obs):
+            b, p, k = obs
+            return jax_update(carry, b, p, k, beta=beta), None
+
+        final, _ = jax.lax.scan(
+            step, state, (byte_lens, prompt_tokens, categories)
+        )
+        return final
+
+    return jax.jit(fold)
 
 
 def jax_conservative_ratio(

@@ -22,6 +22,7 @@ Two paths:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from bisect import bisect_left
 from typing import Optional, Sequence
@@ -34,6 +35,7 @@ from repro.core.calibration import (
     DEFAULT_GAMMA,
     CalibState,
     EmaCalibrator,
+    _count_trace,
     jax_estimate_budget,
 )
 from repro.core.pools import PoolSet, PoolState
@@ -284,10 +286,38 @@ class TokenBudgetRouter:
 SHORT, LONG = 0, 1
 
 
-@jax.jit
-def _route_kernel(budgets: jax.Array, thresholds: jax.Array) -> jax.Array:
-    """N-way threshold search: pool k serves budgets in (B_k, B_{k+1}]."""
-    return jnp.searchsorted(thresholds, budgets, side="left").astype(jnp.int32)
+@functools.lru_cache(maxsize=None)
+def _route_batch_kernel(num_thresholds: int, dtype: str):
+    """Cached jitted Eq. 3 estimate + N-way threshold search, specialized
+    per ``(P, dtype)``.
+
+    The estimate (conservative-ratio lookup, ceil-divide, output cap) and
+    the ``searchsorted`` dispatch fuse into one compiled call; thresholds
+    and γ are *traced* arguments, so adaptive-controller threshold moves
+    and γ sweeps reuse the same executable instead of retracing per epoch.
+    ``repro.core.calibration.kernel_trace_counts()`` exposes the trace
+    counter keyed ``("route", P, dtype)``.
+    """
+    key = ("route", num_thresholds, dtype)
+
+    def kernel(
+        state: CalibState,
+        byte_lens: jax.Array,
+        max_output_tokens: jax.Array,
+        categories: jax.Array,
+        thresholds: jax.Array,
+        gamma: jax.Array,
+    ) -> tuple[jax.Array, jax.Array]:
+        _count_trace(key)  # runs at trace time only
+        budgets = jax_estimate_budget(
+            state, byte_lens, max_output_tokens, categories, gamma=gamma
+        )
+        pools = jnp.searchsorted(thresholds, budgets, side="left").astype(
+            jnp.int32
+        )
+        return pools, budgets
+
+    return jax.jit(kernel)
 
 
 def jax_route_batch(
@@ -311,10 +341,16 @@ def jax_route_batch(
     the threshold because B_short ≤ short C_max). Spillover is a
     load-dependent runtime concern and is not part of the static decision.
     """
-    budgets = jax_estimate_budget(
-        state, byte_lens, max_output_tokens, categories, gamma=gamma
-    )
     if thresholds is None:
         thresholds = [min(b_short, short_cmax)]
     th = jnp.asarray(np.asarray(thresholds), jnp.int32)
-    return _route_kernel(budgets, th), budgets
+    byte_lens = jnp.asarray(byte_lens)
+    kernel = _route_batch_kernel(int(th.shape[0]), str(byte_lens.dtype))
+    return kernel(
+        state,
+        byte_lens,
+        max_output_tokens,
+        categories,
+        th,
+        jnp.float32(gamma),
+    )

@@ -205,31 +205,31 @@ class InstanceSim:
                 )
             )
 
-    # -- preemption (vLLM recompute mode: youngest victim) ---------------------
-    def _preempt_one(self) -> bool:
-        victims = [s for s in self.active if s.decoding]
-        if not victims:
-            return False
-        victim = max(victims, key=lambda s: s.enqueue_time)
-        self.active.remove(victim)
-        self.blocks_free += victim.blocks
-        victim.blocks = 0
-        victim.preemptions += 1
-        self.preemption_count += 1
-        if self.tracer is not None:
-            self.tracer.emit(
-                PREEMPT, self._now, self.pool_index, victim.request.request_id
+    # -- preemption (vLLM recompute mode: youngest victims, batch rule) --------
+    def _evict_victims(self, victims: list[_Seq]) -> None:
+        """Preempt ``victims`` (given in admission order): free their blocks
+        and requeue them recompute-style at the queue head, preserving
+        admission order among the group (vLLM behaviour)."""
+        for seq in victims:
+            self.active.remove(seq)
+            self.blocks_free += seq.blocks
+            seq.blocks = 0
+            seq.preemptions += 1
+            self.preemption_count += 1
+            if self.tracer is not None:
+                self.tracer.emit(
+                    PREEMPT, self._now, self.pool_index, seq.request.request_id
+                )
+            self._carried_preemptions[seq.request.request_id] = seq.preemptions
+        for seq in reversed(victims):
+            # Recompute mode: restart prefill over prompt + generated-so-far
+            # with the original output budget.
+            req = seq.request
+            restart = dataclasses.replace(
+                req, true_input_tokens=req.true_input_tokens + seq.generated
             )
-        self._carried_preemptions[victim.request.request_id] = victim.preemptions
-        # Recompute mode: the sequence restarts prefill over prompt+generated.
-        req = victim.request
-        restart = dataclasses.replace(
-            req, true_input_tokens=req.true_input_tokens + victim.generated
-        )
-        # Re-queue at the front so it resumes promptly (vLLM behaviour).
-        self.queue.appendleft((restart, victim.enqueue_time))
-        self._state_add(+1, -1)
-        return True
+            self.queue.appendleft((restart, seq.enqueue_time))
+        self._state_add(+len(victims), -len(victims))
 
     # -- fault application (repro.sim.faults) ----------------------------------
     def _drop_sequences(self, victims: list[_Seq], requeue: bool) -> list[int]:
@@ -310,35 +310,28 @@ class InstanceSim:
                 # (the paper's point: chunking does NOT shrink KV footprint).
                 break  # a single chunk per iteration (Appendix A)
 
-        # 2) One decode token per active-decoding sequence. A sequence whose
-        # last prefill chunk landed this iteration emits its first token in
-        # the same iteration (prefill->decode fusion).
-        for seq in list(self.active):
-            if seq not in self.active:
-                continue  # evicted by an earlier sequence's preemption
+        # 2) One decode token per active-decoding sequence — *order-free batch
+        # semantics*, shared verbatim with the vectorized and jax backends:
+        #   a. advance every decoding sequence one token (prefill→decode
+        #      fusion: a sequence whose last prefill chunk landed this
+        #      iteration emits its first token in the same iteration);
+        #   b. truncate sequences that hit C_max mid-generation;
+        #   c. completions free their blocks (completion credit) *before*
+        #      KV growth is resolved;
+        #   d. if the survivors' block growth exceeds blocks_free, evict the
+        #      minimal youngest-first prefix of decoding survivors (max
+        #      enqueue_time first, first-admitted tie-break) whose freed
+        #      blocks cover the deficit — one batch decision per iteration,
+        #      with no dependence on within-iteration sequence order.
+        done: list[_Seq] = []
+        growers: list[_Seq] = []  # admission order (self.active invariant)
+        for seq in self.active:
             if not seq.decoding:
                 continue
             if seq.first_token_time is None:
                 seq.first_token_time = end
             seq.generated += 1
             seq.decode_remaining -= 1
-
-            # KV growth: a new block every KV_BLOCK_TOKENS generated tokens.
-            need = _blocks_for(seq.request.true_input_tokens + seq.generated)
-            while need > seq.blocks:
-                if self.blocks_free > 0:
-                    self.blocks_free -= 1
-                    seq.blocks += 1
-                else:
-                    # Try to free memory by preempting the youngest *other*
-                    # decoding sequence; if impossible, preempt self.
-                    if not self._preempt_one():
-                        break
-                    if seq not in self.active:  # we were the victim
-                        break
-
-            if seq not in self.active:
-                continue
 
             # Context-window truncation (hits C_max mid-generation).
             if seq.context_len >= self.pool.c_max and seq.decode_remaining > 0:
@@ -349,23 +342,57 @@ class InstanceSim:
                     self.tracer.emit(
                         TRUNCATE, end, self.pool_index, seq.request.request_id
                     )
-
             if seq.decode_remaining == 0:
-                self.active.remove(seq)
-                self._state_add(0, -1)
-                self.blocks_free += seq.blocks
-                completed.append(
-                    RequestRecord(
-                        request_id=seq.request.request_id,
-                        pool=self.pool.name,
-                        arrival=seq.request.arrival_time,
-                        first_token=seq.first_token_time or end,
-                        finish=end,
-                        output_tokens=seq.generated,
-                        preemptions=seq.preemptions,
-                        truncated=seq.truncated,
-                    )
+                done.append(seq)
+            else:
+                growers.append(seq)
+
+        # c) Completion credit: finished sequences release their blocks
+        # before growth is charged.
+        for seq in done:
+            self.active.remove(seq)
+            self._state_add(0, -1)
+            self.blocks_free += seq.blocks
+            completed.append(
+                RequestRecord(
+                    request_id=seq.request.request_id,
+                    pool=self.pool.name,
+                    arrival=seq.request.arrival_time,
+                    first_token=seq.first_token_time or end,
+                    finish=end,
+                    output_tokens=seq.generated,
+                    preemptions=seq.preemptions,
+                    truncated=seq.truncated,
                 )
+            )
+
+        # d) KV growth: a new block every KV_BLOCK_TOKENS generated tokens.
+        grow = [
+            _blocks_for(s.request.true_input_tokens + s.generated) - s.blocks
+            for s in growers
+        ]
+        demand = sum(grow)
+        if demand > self.blocks_free:
+            # Youngest-first eviction order; `sorted` is stable, so ties on
+            # enqueue_time keep admission order (first-admitted evicted
+            # first — the reference `max()` victim rule).
+            order = sorted(
+                range(len(growers)), key=lambda j: -growers[j].enqueue_time
+            )
+            supply = self.blocks_free
+            evicted: set[int] = set()
+            for j in order:
+                if demand <= supply:
+                    break
+                demand -= grow[j]
+                supply += growers[j].blocks
+                evicted.add(j)
+            self._evict_victims([growers[j] for j in sorted(evicted)])
+            growers = [s for j, s in enumerate(growers) if j not in evicted]
+        for seq in growers:
+            need = _blocks_for(seq.request.true_input_tokens + seq.generated)
+            self.blocks_free -= need - seq.blocks
+            seq.blocks = need
 
         self.records.extend(completed)
         self.busy_time += t_iter

@@ -11,7 +11,7 @@ Drives N instances per pool plus the token-budget router over a trace:
   (vectorized backend);
 * responses feed ``usage.prompt_tokens`` back into the router's EMA.
 
-Two interchangeable backends behind ``FleetSim(backend=...)``:
+Three interchangeable backends behind ``FleetSim(backend=...)``:
 
 ``"reference"``
     The scalar engine of :mod:`repro.sim.engine` — one Python object per
@@ -32,9 +32,21 @@ Two interchangeable backends behind ``FleetSim(backend=...)``:
     calibration-lag tolerance for routed fleets) — see
     ``tests/test_vector_engine.py``.
 
-Both backends accept either a ``Sequence[Request]`` or a ``TraceColumns``;
-the reference backend materializes objects from columns, the vectorized
-backend columnarizes an object list once at entry.
+``"jax"``
+    The fully compiled engine of :mod:`repro.sim.jax_engine` — the whole
+    event loop as one jitted ``lax.while_loop`` over fixed-shape slot
+    arrays, bit-identical to the host backends in the exact classes and
+    tolerance-equivalent on routed fleets (documented approximations:
+    arrival-ordered calibration feedback, spillover off). Fault injection
+    and event tracing are not supported (``FleetSim`` raises); windowed
+    telemetry is replayed into the host registry after the run. Its
+    :func:`repro.sim.jax_engine.run_fleet_grid` vmaps whole
+    threshold/instance/controller-gain sweeps as one device computation —
+    prefer it for sensitivity grids, the vectorized tier for one-off runs.
+
+All backends accept either a ``Sequence[Request]`` or a ``TraceColumns``;
+the reference backend materializes objects from columns, the columnar
+backends columnarize an object list once at entry.
 
 The router reads O(1) ``PoolState`` counters that the engines maintain
 incrementally on every submit/admit/preempt/complete — dispatch never
@@ -269,7 +281,7 @@ class FleetSim:
         injector: Optional[FaultInjector] = None,
         retry_policy: Optional[RetryPolicy] = None,
     ) -> None:
-        if backend not in ("reference", "vectorized"):
+        if backend not in ("reference", "vectorized", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.epoch = epoch
@@ -281,7 +293,10 @@ class FleetSim:
             timing.iter_time(1) if coalesce_dt is None else coalesce_dt
         )
         self.timing = timing
-        if backend == "vectorized":
+        if backend in ("vectorized", "jax"):
+            # The jax backend computes on device and back-fills these
+            # VectorPoolSim shells with records/counters afterwards, so
+            # per-pool introspection works identically across backends.
             self.pools = {
                 name: VectorPoolSim(cfg, n, timing)
                 for name, (cfg, n) in pools.items()
@@ -346,6 +361,11 @@ class FleetSim:
         self.injector = injector
         self.retry_policy = retry_policy
         self._fault_rt: Optional[FaultRuntime] = None
+        if injector is not None and backend == "jax":
+            raise ValueError(
+                "fault injection is not supported on the jax backend; "
+                "use backend='vectorized' for chaos runs"
+            )
         if injector is not None:
             for _, p in ordered:
                 p.install_faults()
@@ -366,6 +386,11 @@ class FleetSim:
                 health=self._fault_rt,
             )
             self.tracer = self.telemetry.events
+            if self.tracer is not None and backend == "jax":
+                raise ValueError(
+                    "event tracing (telemetry events=True) is not supported "
+                    "on the jax backend; windowed time series are"
+                )
             if self.tracer is not None:
                 for idx, (_, p) in enumerate(ordered):
                     engines = (
@@ -559,6 +584,10 @@ class FleetSim:
 
     # -- main loop -------------------------------------------------------------
     def run(self, trace: Trace) -> FleetResult:
+        if self.backend == "jax":
+            from repro.sim import jax_engine
+
+            return jax_engine.run_fleet_jax(self, trace)
         if self.backend == "vectorized":
             return self._run_vectorized(trace)
         if isinstance(trace, TraceColumns):

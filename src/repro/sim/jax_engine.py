@@ -1,0 +1,1217 @@
+"""JIT-compiled fleet backend (``backend="jax"``) + vmapped sensitivity grids.
+
+The third simulator tier. The reference engine (:mod:`repro.sim.engine`)
+is one Python object per sequence; the vectorized engine
+(:mod:`repro.sim.vector_engine`) is masked NumPy over ``(instances,
+n_seq)`` arrays with a Python event loop. This module compiles the *whole*
+event loop — admission, decode k-jumps, completion, truncation, AND the
+order-free batch preemption pass — into one ``lax.while_loop`` body, so an
+entire fleet run is a single XLA executable with no host round-trips. That
+buys the thing neither host tier can do: ``jax.vmap`` over the loop turns a
+16–256-point sensitivity sweep (thresholds × fleet sizes × controller
+gains) into one batched device program (:func:`run_fleet_grid`).
+
+Simulation semantics
+--------------------
+Identical to the host backends at ``coalesce_dt=0`` (per-arrival sync):
+
+* fixed-shape per-pool slot state ``(I, S)`` carried through the loop;
+* head-of-line FIFO admission with KV-block reservation, as an inner
+  fixpoint ``while_loop`` (one admission wave per iteration — instances
+  are independent, so wave order equals the host's per-instance order);
+* event-distance k-jumps with the same integer/float formulas and the
+  same IEEE-754 op order as ``VectorPoolSim._round`` (times are float64
+  — the entry points run under ``jax.experimental.enable_x64``);
+* the shared order-free batch preemption rule (advance → truncate →
+  completion credit → evict the minimal youngest-first prefix of decoding
+  survivors → allocate growth) as a ``lexsort`` + ``cumsum`` +
+  ``jnp.where`` victim-selection pass — the same pass the NumPy engine
+  runs, so routerless single-pool runs are *bit-identical* to both host
+  backends (asserted by ``tests/test_vector_engine.py``).
+
+FIFO queues are request-indexed linked lists (``q_next[rid]`` + per
+instance head/tail); preempted sequences go to a bounded per-instance
+victim stash that the admission loop drains before the FIFO (capacity
+``n_seq`` suffices: FIFO admits only while the stash is empty, so
+``n_active + stash ≤ n_seq`` is invariant).
+
+Routing, calibration, and control
+---------------------------------
+* **Routing** is fused into the dispatch branch as a ``searchsorted``
+  against the *carried* threshold vector — honest under threshold /
+  controller vmap axes. Per-request budgets are precomputed on the host
+  by folding the byte-length observation stream through the cached
+  EMA kernels (:func:`precompute_budget_trajectory`) in arrival order
+  with the same ramped epoch schedule the vectorized backend uses.
+  Approximations vs the host routed path (documented, tolerance-class):
+  feedback folds arrival-ordered trace observations instead of
+  completion-ordered ones, and load-dependent spillover is off (static
+  N-way + hard-constraint clamp only).
+* **Adaptive control** mirrors :class:`repro.core.adaptive.AdaptiveController`
+  in-step: the same AIMD decision rule, constants, and strict-ordering
+  clamp run inside the compiled dispatch branch on the same
+  dispatched-request windows, so controller *gains* can be a vmap axis.
+* **Telemetry** is collected as per-window device snapshots (queue depth,
+  active, KV-free, cumulative error counters, thresholds) and replayed
+  into the host :class:`repro.obs.timeseries.FleetTelemetry` after the
+  run — same windows, same columns; per-window calibration-error series
+  use the final EMA state (device runs don't carry the float EMA).
+
+When to prefer which tier: ``reference`` for unit-level ground truth;
+``vectorized`` for one-off large host runs with faults / spillover /
+event tracing; ``jax`` for grid sweeps and controller tuning where
+compile time amortizes over many lanes. Fault injection is not supported
+on this backend (``FleetSim`` raises).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.core.adaptive import (
+    BoundaryMove,
+    DEFAULT_DECREASE_FACTOR,
+    DEFAULT_ERROR_RATE_HI,
+    DEFAULT_INCREASE_STEP,
+    DEFAULT_OVERLOAD_RATIO_HI,
+)
+from repro.core.calibration import (
+    EmaCalibrator,
+    jax_estimate_budget,
+    jax_update_stream,
+)
+from repro.core.pools import KV_BLOCK_TOKENS, PoolConfig, TOTAL_KV_BLOCKS
+from repro.sim.engine import _blocks_for
+from repro.sim.timing import TimingModel
+from repro.traces.generator import TraceColumns
+
+#: Sentinels for "no constraint" in masked min-reductions (int32-safe).
+_BIG_I = 1 << 30
+_BIG_F = 1.0e18
+
+
+# ---------------------------------------------------------------------------
+# Static compile-time description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _PoolSpec:
+    """Static shape/capacity facts for one pool (hashable → jit cache key)."""
+
+    name: str
+    c_max: int
+    n_seq: int
+    total_blocks: int
+    max_inst: int  # array dimension I (≥ every lane's instance count)
+
+
+@dataclasses.dataclass(frozen=True)
+class _SimSpec:
+    pools: tuple[_PoolSpec, ...]
+    w: float  # roofline W (seconds)
+    h: float  # roofline H (seconds)
+    prefill_chunk: int
+    win_size: int  # monitoring window in dispatched requests; 0 = off
+
+
+def _pool_spec(name: str, cfg: PoolConfig, max_inst: int) -> _PoolSpec:
+    total = min(TOTAL_KV_BLOCKS, cfg.n_seq * _blocks_for(cfg.c_max))
+    return _PoolSpec(
+        name=name,
+        c_max=int(cfg.c_max),
+        n_seq=int(cfg.n_seq),
+        total_blocks=int(total),
+        max_inst=int(max_inst),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The compiled core
+# ---------------------------------------------------------------------------
+
+
+def _make_core(spec: _SimSpec, n: int, return_records: bool):
+    """Build the single-lane simulation function for one (spec, n).
+
+    Returned function signature: ``core(trace, lane) -> dict`` where
+    ``trace`` holds shared arrival-ordered arrays and ``lane`` the
+    per-lane (vmappable) parameters. Must be traced/executed inside an
+    ``enable_x64()`` context — event times are float64 accumulations.
+    """
+    P = len(spec.pools)
+    win = spec.win_size
+    win_cap = (n // win + 2) if win > 0 else 1
+    nb = max(P - 1, 1)  # threshold-column width (≥1 keeps shapes non-empty)
+    i32 = jnp.int32
+    f64 = jnp.float64
+    W = np.float64(spec.w)
+    H = np.float64(spec.h)
+    CHUNK = spec.prefill_chunk
+
+    def blocks_for(tok):
+        return jnp.maximum(1, (tok + (KV_BLOCK_TOKENS - 1)) // KV_BLOCK_TOKENS)
+
+    def init_pool(ps: _PoolSpec):
+        I, S = ps.max_inst, ps.n_seq
+        z2 = jnp.zeros((I, S), i32)
+        return {
+            "occ": jnp.zeros((I, S), bool),
+            "rid": jnp.full((I, S), -1, i32),
+            "enq": jnp.zeros((I, S), f64),
+            "inp": z2,
+            "outp": z2,
+            "pre": z2,
+            "rem": z2,
+            "gen": z2,
+            "blk": z2,
+            "ft": jnp.full((I, S), jnp.nan, f64),
+            "tr": jnp.zeros((I, S), bool),
+            "pc": z2,
+            "sq": z2,
+            "free": jnp.full((I,), ps.total_blocks, i32),
+            "wake": jnp.full((I,), jnp.inf, f64),
+            "nact": jnp.zeros((I,), i32),
+            "qlen": jnp.zeros((I,), i32),
+            "load": jnp.zeros((I,), i32),
+            "qh": jnp.full((I,), -1, i32),
+            "qt": jnp.full((I,), -1, i32),
+            "qnext": jnp.full((n + 1,), -1, i32),
+            "vrid": jnp.zeros((I, S), i32),
+            "vinp": jnp.zeros((I, S), i32),
+            "vpc": jnp.zeros((I, S), i32),
+            "vcnt": jnp.zeros((I,), i32),
+            "sqc": jnp.asarray(0, i32),
+            "npre": jnp.asarray(0, i32),
+            "nrej": jnp.asarray(0, i32),
+            "ntr": jnp.asarray(0, i32),
+        }
+
+    def pool_errors(pools_):
+        return jnp.stack([p["npre"] + p["nrej"] + p["ntr"] for p in pools_])
+
+    def wake_min_all(pools_):
+        return functools.reduce(
+            jnp.minimum, [jnp.min(p["wake"]) for p in pools_]
+        )
+
+    def core(trace, lane):
+        arr_t = trace["arr"]
+        inp_t = trace["inp"]
+        out_t = trace["outp"]
+        bud_t = trace["budget"]
+        ctrl = lane["ctrl"]
+
+        # ---- monitoring window + in-step AIMD controller ------------------
+        def window_step(c, now_t):
+            fire = (c["win_seen"] - c["win_prev"]) >= win
+            cur = pool_errors(c["pools"])
+            delta = cur - c["prev_err"]
+            wr = c["win_seen"] - c["win_prev"]
+            queues = jnp.stack([jnp.sum(p["qlen"], dtype=i32) for p in c["pools"]])
+            pressure = queues.astype(jnp.float32) / jnp.maximum(
+                1, lane["ninst"]
+            ).astype(jnp.float32)
+            old = c["th"]
+            moved = jnp.asarray(False)
+            th = old
+            if P > 1:
+                # AIMD per boundary — the exact decision rule and constants
+                # of AdaptiveController._aimd_move / update().
+                wrf = jnp.maximum(wr, 1).astype(jnp.float32)
+                props = []
+                for k in range(P - 1):
+                    err_rate = delta[k].astype(jnp.float32) / wrf
+                    p_lo, p_hi = pressure[k], pressure[k + 1]
+                    dec = (err_rate > ctrl["err_hi"]) | (
+                        (p_lo > ctrl["over_hi"] * jnp.maximum(p_hi, 0.25))
+                        & (p_lo > 1.0)
+                    )
+                    inc = (~dec) & (p_hi < 0.25) & (p_lo < 1.0)
+                    down = (
+                        old[k].astype(jnp.float32) * ctrl["factor"]
+                    ).astype(i32)
+                    props.append(
+                        jnp.where(
+                            dec, down, jnp.where(inc, old[k] + ctrl["step"], old[k])
+                        )
+                    )
+                # Feasibility projection: forward pass with a running lower
+                # bound; degenerate case falls back to the old vector.
+                lo = ctrl["b_min"]
+                feasible = jnp.asarray(True)
+                newv = []
+                for k in range(P - 1):
+                    cap = spec.pools[k].c_max
+                    feasible = feasible & (lo <= cap)
+                    nk = jnp.minimum(jnp.maximum(props[k], lo), cap)
+                    newv.append(nk)
+                    lo = nk + 1
+                newv = jnp.where(feasible, jnp.stack(newv), old)
+                apply = fire & (ctrl["enabled"] > 0) & (wr > 0)
+                th = jnp.where(apply, newv, old)
+                moved = apply & jnp.any(newv != old)
+
+            # Device telemetry snapshot (post-controller thresholds, same
+            # ordering as the host's _window_step).
+            wn = c["win"]
+            wdx = jnp.minimum(c["wi"], win_cap - 1)
+
+            def put(name, val):
+                return wn[name].at[wdx].set(
+                    jnp.where(fire, val, wn[name][wdx])
+                )
+
+            th_row = th if P > 1 else jnp.zeros((nb,), i32)
+            wn = {
+                "t_req": put("t_req", c["win_seen"]),
+                "now": put("now", now_t),
+                "th": put("th", th_row),
+                "queue": put("queue", queues),
+                "active": put(
+                    "active", jnp.stack([jnp.sum(p["nact"], dtype=i32) for p in c["pools"]])
+                ),
+                "freeb": put(
+                    "freeb", jnp.stack([jnp.sum(p["free"], dtype=i32) for p in c["pools"]])
+                ),
+                "pre": put("pre", jnp.stack([p["npre"] for p in c["pools"]])),
+                "rej": put("rej", jnp.stack([p["nrej"] for p in c["pools"]])),
+                "trunc": put("trunc", jnp.stack([p["ntr"] for p in c["pools"]])),
+            }
+            return {
+                **c,
+                "th": th,
+                "prev_err": jnp.where(fire, cur, c["prev_err"]),
+                "win_prev": jnp.where(fire, c["win_seen"], c["win_prev"]),
+                "wi": c["wi"] + jnp.where(fire, 1, 0),
+                "moves": c["moves"] + jnp.where(moved, 1, 0),
+                "win": wn,
+            }
+
+        # ---- dispatch one arrival -----------------------------------------
+        def dispatch(c):
+            a = c["a"]
+            ai = jnp.minimum(a, n - 1)
+            t = arr_t[ai]
+            pidx = jnp.searchsorted(
+                c["th"][: P - 1], bud_t[ai], side="left"
+            ).astype(i32)
+            rec = c["rec"]
+            rec = {**rec, "pool": rec["pool"].at[ai].set(pidx)}
+            pools_ = list(c["pools"])
+            for p in range(P):
+                ps = spec.pools[p]
+                st = pools_[p]
+                sel = pidx == p
+                alive = jnp.arange(ps.max_inst) < lane["ninst"][p]
+                i = jnp.argmin(jnp.where(alive, st["load"], _BIG_I))
+                rej = inp_t[ai] >= ps.c_max
+                # Submit-time rejection: prompt alone exceeds C_max.
+                ridx = jnp.where(sel & rej, ai, n)
+                rec = {
+                    **rec,
+                    "first": rec["first"].at[ridx].set(t),
+                    "finish": rec["finish"].at[ridx].set(t),
+                    "rej": rec["rej"].at[ridx].set(True),
+                }
+                ok = sel & ~rej
+                qh_i = st["qh"][i]
+                was_empty = qh_i < 0
+                qnext = st["qnext"].at[jnp.where(ok, ai, n)].set(-1)
+                qnext = qnext.at[
+                    jnp.where(ok & ~was_empty, st["qt"][i], n)
+                ].set(ai.astype(i32))
+                pools_[p] = {
+                    **st,
+                    "qnext": qnext,
+                    "qh": st["qh"].at[i].set(
+                        jnp.where(ok & was_empty, ai.astype(i32), qh_i)
+                    ),
+                    "qt": st["qt"].at[i].set(
+                        jnp.where(ok, ai.astype(i32), st["qt"][i])
+                    ),
+                    "qlen": st["qlen"].at[i].add(jnp.where(ok, 1, 0)),
+                    "load": st["load"].at[i].add(jnp.where(ok, 1, 0)),
+                    "wake": st["wake"].at[i].set(
+                        jnp.where(
+                            ok & jnp.isinf(st["wake"][i]), t, st["wake"][i]
+                        )
+                    ),
+                    "nrej": st["nrej"] + jnp.where(sel & rej, 1, 0),
+                }
+            c = {
+                **c,
+                "a": a + 1,
+                "pools": tuple(pools_),
+                "rec": rec,
+                "win_seen": c["win_seen"] + 1,
+            }
+            if win > 0:
+                c = window_step(c, t)
+            return c
+
+        # ---- one masked round for one pool --------------------------------
+        def pool_round(p, st, rec, t_limit):
+            ps = spec.pools[p]
+            I, S = ps.max_inst, ps.n_seq
+            rows = jnp.arange(I)
+            due = st["wake"] < t_limit
+
+            # Admission fixpoint: one wave admits/rejects at most one head
+            # per due instance; loops until no instance can make progress.
+            # (Instances are independent, so wave order ≡ the host's
+            # per-instance sequential admission.)
+            def adm_masks(st_):
+                stash = st_["vcnt"] > 0
+                hrid = jnp.where(stash, st_["vrid"][:, 0], st_["qh"])
+                has = due & (stash | (st_["qh"] >= 0))
+                hc = jnp.clip(hrid, 0, n - 1)
+                hinp = jnp.where(stash, st_["vinp"][:, 0], inp_t[hc])
+                hpc = jnp.where(stash, st_["vpc"][:, 0], 0)
+                need = blocks_for(hinp)
+                can = st_["nact"] < S
+                rejm = has & can & (need > ps.total_blocks)
+                admm = has & can & ~rejm & (need <= st_["free"])
+                return stash, hrid, hc, hinp, hpc, need, rejm, admm
+
+            def adm_cond(val):
+                st_, _ = val
+                *_, rejm, admm = adm_masks(st_)
+                return jnp.any(rejm | admm)
+
+            def adm_body(val):
+                st_, rec_ = val
+                stash, hrid, hc, hinp, hpc, need, rejm, admm = adm_masks(st_)
+                prog = rejm | admm
+                # pop the head (victim stash first — head-of-line order)
+                pop_st = prog & stash
+                pop_f = prog & ~stash
+
+                def shiftl(arr2):
+                    return jnp.concatenate(
+                        [arr2[:, 1:], arr2[:, :1]], axis=1
+                    )
+
+                vrid = jnp.where(pop_st[:, None], shiftl(st_["vrid"]), st_["vrid"])
+                vinp = jnp.where(pop_st[:, None], shiftl(st_["vinp"]), st_["vinp"])
+                vpc = jnp.where(pop_st[:, None], shiftl(st_["vpc"]), st_["vpc"])
+                nxt = st_["qnext"][jnp.clip(st_["qh"], 0, n)]
+                qh = jnp.where(pop_f, nxt, st_["qh"])
+                qt = jnp.where(pop_f & (nxt < 0), -1, st_["qt"])
+                # admission-reject record at now = wake (host: add_one with
+                # first = finish = now, zero output/preemptions)
+                ridx = jnp.where(rejm, hc, n)
+                rec_ = {
+                    **rec_,
+                    "first": rec_["first"].at[ridx].set(st_["wake"]),
+                    "finish": rec_["finish"].at[ridx].set(st_["wake"]),
+                    "rej": rec_["rej"].at[ridx].set(True),
+                }
+                # admit into the first free slot (argmin over occupied —
+                # the host's np.argmin tie-break)
+                slot = jnp.argmin(st_["occ"], axis=1)
+                base = st_["sqc"]
+                rank = (jnp.cumsum(admm) - admm).astype(i32)
+
+                def w2(arr2, val):
+                    return arr2.at[rows, slot].set(
+                        jnp.where(admm, val, arr2[rows, slot])
+                    )
+
+                return (
+                    {
+                        **st_,
+                        "vrid": vrid,
+                        "vinp": vinp,
+                        "vpc": vpc,
+                        "vcnt": st_["vcnt"] - pop_st,
+                        "qh": qh,
+                        "qt": qt,
+                        "qlen": st_["qlen"] - prog,
+                        "load": st_["load"] - rejm,
+                        "nrej": st_["nrej"] + jnp.sum(rejm, dtype=i32),
+                        "occ": w2(st_["occ"], True),
+                        "rid": w2(st_["rid"], hrid),
+                        "enq": w2(st_["enq"], arr_t[hc]),
+                        "inp": w2(st_["inp"], hinp),
+                        "outp": w2(st_["outp"], out_t[hc]),
+                        "pre": w2(st_["pre"], hinp),
+                        "rem": w2(st_["rem"], out_t[hc]),
+                        "gen": w2(st_["gen"], 0),
+                        "blk": w2(st_["blk"], need),
+                        "ft": w2(st_["ft"], jnp.nan),
+                        "tr": w2(st_["tr"], False),
+                        "pc": w2(st_["pc"], hpc),
+                        "sq": w2(st_["sq"], base + rank),
+                        "sqc": base + jnp.sum(admm, dtype=i32),
+                        "free": st_["free"] - jnp.where(admm, need, 0),
+                        "nact": st_["nact"] + admm,
+                    },
+                    rec_,
+                )
+
+            st, rec = lax.while_loop(adm_cond, adm_body, (st, rec))
+
+            nact = st["nact"]
+            busy = due & (nact > 0)
+            idle = due & ~busy
+            wake_idle = jnp.where(
+                idle,
+                jnp.where(st["qlen"] > 0, st["wake"] + 1e-9, jnp.inf),
+                st["wake"],
+            )
+            now = jnp.where(busy, st["wake"], 0.0)
+            t_it = W + H * nact.astype(f64)
+            bb = busy[:, None]
+            occ = st["occ"]
+
+            # one prefill chunk to the oldest prefilling sequence
+            pmask = occ & (st["pre"] > 0)
+            has_pre = pmask.any(axis=1) & busy
+            oldest = jnp.argmin(jnp.where(pmask, st["sq"], _BIG_I), axis=1)
+            take = jnp.minimum(st["pre"][rows, oldest], CHUNK)
+            pre_arr = st["pre"].at[rows, oldest].add(
+                jnp.where(has_pre, -take, 0)
+            )
+
+            # event-distance k-jump (identical formulas to the host round)
+            dec = occ & (pre_arr == 0) & (st["rem"] > 0)
+            inp2, gen0, rem0, blk0 = st["inp"], st["gen"], st["rem"], st["blk"]
+            ctx0 = inp2 + gen0
+            k_complete = jnp.min(jnp.where(dec, rem0, _BIG_I), axis=1)
+            k_trunc = jnp.min(jnp.where(dec, ps.c_max - ctx0, _BIG_I), axis=1)
+            q = (t_limit - now) / t_it
+            k_time = jnp.where(jnp.isfinite(q), jnp.ceil(q - 1e-9), _BIG_F)
+            k = jnp.minimum(
+                jnp.minimum(k_complete, k_trunc).astype(f64), k_time
+            )
+            k = jnp.where(has_pre, 1.0, jnp.maximum(k, 1.0))
+            k = jnp.minimum(k, float(_BIG_I)).astype(i32)
+
+            def growth(kk):
+                ng = gen0 + jnp.where(dec, kk[:, None], 0)
+                nd = jnp.where(occ, blocks_for(inp2 + ng), 0)
+                return jnp.maximum(nd - blk0, 0).sum(axis=1, dtype=i32)
+
+            over = busy & (growth(k) > st["free"])
+            k = jnp.where(over, 1, k)
+            end = now + k.astype(f64) * t_it
+
+            # unified decode pass — the order-free batch preemption rule
+            kcol = jnp.where(dec, k[:, None], 0)
+            gen_a = gen0 + kcol
+            rem_a = rem0 - kcol
+            ft_a = jnp.where(
+                dec & jnp.isnan(st["ft"]), (now + t_it)[:, None], st["ft"]
+            )
+            trunc_n = dec & (inp2 + gen_a >= ps.c_max) & (rem_a > 0) & bb
+            rem_a = jnp.where(trunc_n, 0, rem_a)
+            tr_a = st["tr"] | trunc_n
+            ntr = st["ntr"] + jnp.sum(trunc_n, dtype=i32)
+
+            comp = dec & (rem_a == 0) & bb
+            ridx = jnp.where(comp, st["rid"], n)
+            rec = {
+                **rec,
+                "first": rec["first"].at[ridx].set(ft_a),
+                "finish": rec["finish"].at[ridx].set(
+                    jnp.broadcast_to(end[:, None], (I, S))
+                ),
+                "out": rec["out"].at[ridx].set(gen_a),
+                "pre": rec["pre"].at[ridx].set(st["pc"]),
+                "trunc": rec["trunc"].at[ridx].set(tr_a),
+            }
+            free1 = st["free"] + jnp.sum(jnp.where(comp, blk0, 0), axis=1, dtype=i32)
+            ncomp = jnp.sum(comp, axis=1, dtype=i32)
+
+            surv = dec & (rem_a > 0) & bb
+            need_s = jnp.where(surv, blocks_for(inp2 + gen_a), blk0)
+            grow = jnp.where(surv, need_s - blk0, 0)
+            demand = grow.sum(axis=1, dtype=i32)
+            keyq = jnp.where(surv, -st["enq"], jnp.inf)
+            order = jnp.lexsort((st["sq"], keyq), axis=1)
+            sblk = jnp.take_along_axis(
+                jnp.where(surv, blk0, 0), order, axis=1
+            )
+            sgrow = jnp.take_along_axis(grow, order, axis=1)
+            okj = demand[:, None] - jnp.cumsum(sgrow, axis=1) <= (
+                free1[:, None] + jnp.cumsum(sblk, axis=1)
+            )
+            jsel = jnp.where(
+                demand <= free1, 0, jnp.argmax(okj, axis=1) + 1
+            )
+            inv = jnp.argsort(order, axis=1)  # inverse permutation = rank
+            evict = (inv < jsel[:, None]) & surv
+            npre = st["npre"] + jnp.sum(evict, dtype=i32)
+            free1 = free1 + jnp.sum(jnp.where(evict, blk0, 0), axis=1, dtype=i32)
+            nevict = jnp.sum(evict, axis=1, dtype=i32)
+
+            # victims → stash, in admission (seq_no) order, ahead of the
+            # previous stash (requeue-at-head semantics)
+            gord = jnp.argsort(jnp.where(evict, st["sq"], _BIG_I), axis=1)
+            g_rid = jnp.take_along_axis(st["rid"], gord, axis=1)
+            g_inp = jnp.take_along_axis(inp2 + gen_a, gord, axis=1)
+            g_pc = jnp.take_along_axis(st["pc"] + 1, gord, axis=1)
+            rr = jnp.arange(S)[None, :]
+            in_new = rr < nevict[:, None]
+            old_idx = jnp.clip(rr - nevict[:, None], 0, S - 1)
+            vrid = jnp.where(
+                in_new, g_rid, jnp.take_along_axis(st["vrid"], old_idx, axis=1)
+            )
+            vinp = jnp.where(
+                in_new, g_inp, jnp.take_along_axis(st["vinp"], old_idx, axis=1)
+            )
+            vpc = jnp.where(
+                in_new, g_pc, jnp.take_along_axis(st["vpc"], old_idx, axis=1)
+            )
+
+            keep = surv & ~evict
+            free1 = free1 - jnp.sum(jnp.where(keep, grow, 0), axis=1, dtype=i32)
+            cleared = comp | evict
+            nact_a = nact - ncomp - nevict
+            qlen_a = st["qlen"] + nevict
+            alive_r = (nact_a > 0) | (qlen_a > 0)
+
+            st = {
+                **st,
+                "occ": jnp.where(bb, occ & ~cleared, occ),
+                "pre": pre_arr,
+                "rem": jnp.where(bb, rem_a, rem0),
+                "gen": jnp.where(bb, gen_a, gen0),
+                "blk": jnp.where(
+                    bb, jnp.where(cleared, 0, jnp.where(keep, need_s, blk0)), blk0
+                ),
+                "ft": jnp.where(bb, ft_a, st["ft"]),
+                "tr": jnp.where(bb, tr_a, st["tr"]),
+                "vrid": jnp.where(bb, vrid, st["vrid"]),
+                "vinp": jnp.where(bb, vinp, st["vinp"]),
+                "vpc": jnp.where(bb, vpc, st["vpc"]),
+                "vcnt": jnp.where(busy, st["vcnt"] + nevict, st["vcnt"]),
+                "free": jnp.where(busy, free1, st["free"]),
+                "nact": jnp.where(busy, nact_a, nact),
+                "qlen": jnp.where(busy, qlen_a, st["qlen"]),
+                "load": jnp.where(busy, st["load"] - ncomp, st["load"]),
+                "wake": jnp.where(
+                    busy, jnp.where(alive_r, end, jnp.inf), wake_idle
+                ),
+                "npre": npre,
+                "ntr": ntr,
+            }
+            return st, rec
+
+        def round_(c, t_limit):
+            pools_ = list(c["pools"])
+            rec = c["rec"]
+            for p in range(P):
+                pools_[p], rec = pool_round(p, pools_[p], rec, t_limit)
+            return {**c, "pools": tuple(pools_), "rec": rec}
+
+        # ---- outer event loop ---------------------------------------------
+        def next_arr(c):
+            return jnp.where(
+                c["a"] < n, arr_t[jnp.minimum(c["a"], n - 1)], jnp.inf
+            )
+
+        def cond_fn(c):
+            return (c["a"] < n) | jnp.isfinite(wake_min_all(c["pools"]))
+
+        # Arrival-first tie-break: dispatch while t_arr ≤ every wake
+        # (matches the host heap's ``next_arrival <= next_event``). The
+        # arrival drain is its own inner while_loop rather than one arm of
+        # a lax.cond: vmapped cond lowers to select and would execute the
+        # expensive round body once per *arrival* across every lane — the
+        # split keeps the grid's per-iteration cost at dispatch cost while
+        # draining and pays for a round only when an instance is due.
+        def disp_cond(c):
+            return (c["a"] < n) & (
+                next_arr(c) <= wake_min_all(c["pools"])
+            )
+
+        def body_fn(c):
+            c = lax.while_loop(disp_cond, dispatch, c)
+            return round_(c, next_arr(c))
+
+        c0 = {
+            "a": jnp.asarray(0, i32),
+            "pools": tuple(init_pool(ps) for ps in spec.pools),
+            "rec": {
+                "first": jnp.zeros((n + 1,), f64),
+                "finish": jnp.zeros((n + 1,), f64),
+                "out": jnp.zeros((n + 1,), i32),
+                "pre": jnp.zeros((n + 1,), i32),
+                "trunc": jnp.zeros((n + 1,), bool),
+                "rej": jnp.zeros((n + 1,), bool),
+                "pool": jnp.zeros((n + 1,), i32),
+            },
+            "th": lane["th"],
+            "prev_err": jnp.zeros((P,), i32),
+            "win_seen": jnp.asarray(0, i32),
+            "win_prev": jnp.asarray(0, i32),
+            "wi": jnp.asarray(0, i32),
+            "moves": jnp.asarray(0, i32),
+            "win": {
+                "t_req": jnp.zeros((win_cap,), i32),
+                "now": jnp.zeros((win_cap,), f64),
+                "th": jnp.zeros((win_cap, nb), i32),
+                "queue": jnp.zeros((win_cap, P), i32),
+                "active": jnp.zeros((win_cap, P), i32),
+                "freeb": jnp.zeros((win_cap, P), i32),
+                "pre": jnp.zeros((win_cap, P), i32),
+                "rej": jnp.zeros((win_cap, P), i32),
+                "trunc": jnp.zeros((win_cap, P), i32),
+            },
+        }
+        c = lax.while_loop(cond_fn, body_fn, c0)
+
+        rec = {k: v[:n] for k, v in c["rec"].items()}
+        compm = ~rec["rej"]
+        ttft = jnp.where(compm, rec["first"] - arr_t, jnp.nan)
+        tpot = jnp.where(
+            compm & (rec["out"] > 1),
+            (rec["finish"] - rec["first"]) / jnp.maximum(rec["out"] - 1, 1),
+            jnp.nan,
+        )
+        out = {
+            "metrics": {
+                "completed": jnp.sum(compm),
+                "rejected": jnp.sum(rec["rej"]),
+                "truncated": jnp.sum(rec["trunc"]),
+                "routed": jnp.stack(
+                    [jnp.sum(rec["pool"] == p) for p in range(P)]
+                ),
+                "ttft_mean": jnp.nanmean(ttft),
+                "ttft_p50": jnp.nanpercentile(ttft, 50),
+                "ttft_p99": jnp.nanpercentile(ttft, 99),
+                "tpot_mean": jnp.nanmean(tpot),
+                "tpot_p99": jnp.nanpercentile(tpot, 99),
+                "t_end": jnp.max(rec["finish"]),
+                "makespan": jnp.max(rec["finish"]) - jnp.min(arr_t),
+            },
+            "preempt": jnp.stack([p["npre"] for p in c["pools"]]),
+            "reject": jnp.stack([p["nrej"] for p in c["pools"]]),
+            "truncate": jnp.stack([p["ntr"] for p in c["pools"]]),
+            "th": c["th"],
+            "moves": c["moves"],
+            "nwin": c["wi"],
+            "win": c["win"],
+        }
+        if return_records:
+            out["rec"] = rec
+        return out
+
+    return core
+
+
+@functools.lru_cache(maxsize=None)
+def _runner(spec: _SimSpec, n: int, return_records: bool, grid: bool):
+    """Cached jitted simulation, specialized per (spec, n, outputs, vmap)."""
+    core = _make_core(spec, n, return_records)
+    fn = jax.vmap(core, in_axes=(None, 0)) if grid else core
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Host-side routing precompute
+# ---------------------------------------------------------------------------
+
+
+def precompute_budget_trajectory(
+    cols: TraceColumns,
+    calibrator: EmaCalibrator,
+    *,
+    epoch_cap: int,
+):
+    """Per-request estimated budgets with epoch-lagged EMA feedback.
+
+    Mirrors the vectorized backend's ramped routing epochs (64 doubling to
+    ``epoch_cap``): requests in one epoch route with the EMA state as of
+    the epoch start, then the epoch's observations fold in through the
+    cached ``lax.scan`` kernel. The device loop then only needs a
+    ``searchsorted`` per dispatch — thresholds stay honest vmap axes while
+    the float EMA never enters the compiled loop. Approximation vs the
+    host: observations fold in *arrival* order (host folds completions),
+    which the routed-tolerance test class bounds.
+
+    Returns ``(budgets int32 (n,), final CalibState)``.
+    """
+    n = len(cols)
+    budgets = np.zeros(n, dtype=np.int32)
+    state = calibrator.to_state()
+    gamma = float(calibrator.gamma)
+    beta = float(calibrator.beta)
+    chunk = min(64, epoch_cap)
+    pos = 0
+    while pos < n:
+        start = pos
+        pos = min(n, pos + chunk)
+        chunk = min(epoch_cap, chunk * 2)
+        cat = jnp.asarray(cols.category[start:pos], jnp.int32)
+        budgets[start:pos] = np.asarray(
+            jax_estimate_budget(
+                state,
+                jnp.asarray(cols.byte_len[start:pos]),
+                jnp.asarray(cols.max_output_tokens[start:pos]),
+                cat,
+                gamma=gamma,
+            )
+        )
+        state = jax_update_stream(
+            state,
+            jnp.asarray(cols.byte_len[start:pos], jnp.float32),
+            jnp.asarray(cols.true_input_tokens[start:pos], jnp.float32),
+            cat,
+            beta=beta,
+        )
+    return budgets, state
+
+
+def _trace_arrays(cols: TraceColumns, budgets: Optional[np.ndarray]):
+    n = len(cols)
+    return {
+        "arr": np.asarray(cols.arrival_time, np.float64),
+        "inp": np.asarray(cols.true_input_tokens, np.int32),
+        "outp": np.asarray(cols.true_output_tokens, np.int32),
+        "budget": (
+            np.zeros(n, np.int32) if budgets is None else budgets
+        ),
+    }
+
+
+def _ctrl_params(controller, enabled: bool):
+    """Controller gains as a traced scalar dict (a vmappable lane axis)."""
+    if controller is None:
+        return {
+            "enabled": np.int32(0),
+            "b_min": np.int32(512),
+            "step": np.int32(DEFAULT_INCREASE_STEP),
+            "factor": np.float32(DEFAULT_DECREASE_FACTOR),
+            "err_hi": np.float32(DEFAULT_ERROR_RATE_HI),
+            "over_hi": np.float32(DEFAULT_OVERLOAD_RATIO_HI),
+        }
+    return {
+        "enabled": np.int32(1 if enabled else 0),
+        "b_min": np.int32(controller.b_min),
+        "step": np.int32(controller.increase_step),
+        "factor": np.float32(controller.decrease_factor),
+        "err_hi": np.float32(controller.error_rate_hi),
+        "over_hi": np.float32(controller.overload_ratio_hi),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FleetSim backend entry (single lane)
+# ---------------------------------------------------------------------------
+
+
+def run_fleet_jax(fleet, trace):
+    """Execute one fleet run on the compiled backend; returns FleetResult.
+
+    Called by ``FleetSim.run`` for ``backend="jax"``. The fleet's
+    ``VectorPoolSim`` shells receive the device-computed records and
+    counters afterwards, so ``fleet.pools[name].record_arrays()``,
+    telemetry replay, and ``router.stats()`` all behave like a host run.
+    """
+    # Import here: fleet imports this module lazily, and metrics/fleet
+    # are imported lazily here, to keep the module graph acyclic.
+    from repro.sim.fleet import FleetResult
+    from repro.sim.metrics import summarize_columns
+
+    cols = (
+        trace
+        if isinstance(trace, TraceColumns)
+        else TraceColumns.from_requests(trace)
+    ).sorted_by_arrival()
+    n = len(cols)
+
+    ordered = sorted(fleet._pool_index, key=fleet._pool_index.get)
+    shells = [fleet.pools[name] for name in ordered]
+    spec = _SimSpec(
+        # Capacities come from the live shells (not recomputed from the
+        # config) so post-construction total_blocks overrides are honored.
+        pools=tuple(
+            _PoolSpec(
+                name=name,
+                c_max=int(s.config.c_max),
+                n_seq=int(s.config.n_seq),
+                total_blocks=int(s.total_blocks),
+                max_inst=int(s.num_instances),
+            )
+            for name, s in zip(ordered, shells)
+        ),
+        w=float(fleet.timing.w_base),
+        h=float(fleet.timing.h_per_seq),
+        prefill_chunk=int(fleet.timing.prefill_chunk),
+        win_size=int(fleet._win_size),
+    )
+    P = len(spec.pools)
+
+    router = fleet.router
+    budgets = None
+    if router is not None and n:
+        epoch_cap = (
+            fleet.epoch
+            if fleet.controller is None
+            else max(1, min(fleet.epoch, fleet.control_window))
+        )
+        budgets, final_state = precompute_budget_trajectory(
+            cols, router.calibrator, epoch_cap=epoch_cap
+        )
+        router.calibrator.load_state(final_state)
+        th0 = [int(b) for b in router.pools.thresholds]
+    else:
+        th0 = []
+
+    lane = {
+        "th": np.asarray(th0, np.int32),
+        "ninst": np.asarray(
+            [fleet.pools[name].num_instances for name in ordered], np.int32
+        ),
+        "ctrl": _ctrl_params(fleet.controller, enabled=True),
+    }
+    if self_telemetry := fleet.telemetry:
+        self_telemetry.set_trace(
+            cols.byte_len, cols.category, cols.true_input_tokens,
+            cols.max_output_tokens,
+        )
+
+    if n == 0:
+        empty = {k: np.empty(0, dt) for k, dt in (
+            ("request_id", np.int64), ("arrival", np.float64),
+            ("first_token", np.float64), ("finish", np.float64),
+            ("output_tokens", np.int64), ("preemptions", np.int64),
+            ("truncated", bool), ("rejected", bool),
+        )}
+        return FleetResult(
+            summary=summarize_columns("fleet", empty),
+            per_pool={name: summarize_columns(name, empty) for name in ordered},
+            router_stats=router.stats() if router else {},
+            preemptions=0, rejections=0, truncations=0,
+            telemetry=fleet.telemetry, slo=fleet.slo,
+        )
+
+    with enable_x64():
+        out = _runner(spec, n, True, False)(_trace_arrays(cols, budgets), lane)
+        out = jax.tree_util.tree_map(np.asarray, out)
+
+    rec = out["rec"]
+    ids = np.asarray(cols.request_id, np.int64)
+    arr = np.asarray(cols.arrival_time, np.float64)
+    fleet_cols = {
+        "request_id": ids,
+        "arrival": arr,
+        "first_token": rec["first"],
+        "finish": rec["finish"],
+        "output_tokens": rec["out"].astype(np.int64),
+        "preemptions": rec["pre"].astype(np.int64),
+        "truncated": rec["trunc"],
+        "rejected": rec["rej"],
+    }
+    per_pool_cols = {}
+    for idx, name in enumerate(ordered):
+        m = rec["pool"] == idx
+        pc = {k: v[m] for k, v in fleet_cols.items()}
+        per_pool_cols[name] = pc
+        shell = shells[idx]
+        shell._records.add_bulk(*(pc[k] for k, _ in shell._records.COLUMNS))
+        shell.preemption_count = int(out["preempt"][idx])
+        shell.rejection_count = int(out["reject"][idx])
+        shell.truncation_count = int(out["truncate"][idx])
+        if router is not None:
+            router.routed[name] += int(out["metrics"]["routed"][idx])
+
+    final_th = [int(b) for b in out["th"][: P - 1]]
+    if router is not None and fleet.controller is not None:
+        router.pools.set_thresholds(final_th)
+        _synthesize_history(fleet.controller, out, th0)
+
+    t_end = float(out["metrics"]["t_end"])
+    if fleet.telemetry is not None:
+        _replay_telemetry(fleet, ordered, shells, spec, out, n, t_end, final_th)
+
+    return FleetResult(
+        summary=summarize_columns("fleet", fleet_cols),
+        per_pool={
+            name: summarize_columns(name, c)
+            for name, c in per_pool_cols.items()
+        },
+        router_stats=router.stats() if router else {},
+        preemptions=int(out["preempt"].sum()),
+        rejections=int(out["reject"].sum()),
+        truncations=int(out["truncate"].sum()),
+        telemetry=fleet.telemetry,
+        slo=fleet.slo,
+    )
+
+
+def _synthesize_history(controller, out, th0):
+    """Rebuild a BoundaryMove trajectory from the device window snapshots.
+
+    The device loop records the post-controller threshold vector at every
+    window; diffing consecutive snapshots recovers when each boundary
+    moved and to what value. The AIMD input signals are not re-derived —
+    moves carry reason "device"."""
+    nwin = int(out["nwin"])
+    prev = list(th0)
+    for w in range(nwin):
+        cur = [int(b) for b in out["win"]["th"][w][: len(prev)]]
+        for k, (a, b) in enumerate(zip(prev, cur)):
+            if a != b:
+                controller.history.append(
+                    BoundaryMove(
+                        t=int(out["win"]["t_req"][w]),
+                        boundary=k,
+                        value=b,
+                        reason="device",
+                    )
+                )
+        prev = cur
+
+
+def _replay_telemetry(fleet, ordered, shells, spec, out, n, t_end, final_th):
+    """Replay device window snapshots into the host FleetTelemetry.
+
+    Same windows, same sampling order (controller's thresholds first,
+    then the sample) as the host backends. Counter columns come from the
+    device's cumulative per-pool counters; gauges (queue depth, active,
+    kv_frac) from the snapshot state. The calibration-error series uses
+    the final EMA state for every window (the device run does not carry
+    the float EMA) — documented approximation."""
+    telemetry = fleet.telemetry
+    win = out["win"]
+    nwin = int(out["nwin"])
+    router = fleet.router
+    prev_req = 0
+    for name, shell in zip(ordered, shells):
+        shell.blocks_free = np.zeros(shell.num_instances, dtype=np.int64)
+    for w in range(nwin):
+        for idx, shell in enumerate(shells):
+            shell.preemption_count = int(win["pre"][w, idx])
+            shell.rejection_count = int(win["rej"][w, idx])
+            shell.truncation_count = int(win["trunc"][w, idx])
+            shell.state.queue_depth = int(win["queue"][w, idx])
+            shell.state.active = int(win["active"][w, idx])
+            shell.blocks_free[:] = 0
+            shell.blocks_free[0] = int(win["freeb"][w, idx])
+        if router is not None and fleet.controller is not None:
+            router.pools.set_thresholds(
+                [int(b) for b in win["th"][w][: len(router.pools) - 1]]
+            )
+        t_req = int(win["t_req"][w])
+        telemetry.sample(
+            t_req=t_req, now=float(win["now"][w]), lo=prev_req, hi=t_req
+        )
+        prev_req = t_req
+    # final flush (host _finish_windows): drained end state
+    for idx, shell in enumerate(shells):
+        shell.preemption_count = int(out["preempt"][idx])
+        shell.rejection_count = int(out["reject"][idx])
+        shell.truncation_count = int(out["truncate"][idx])
+        shell.state.queue_depth = 0
+        shell.state.active = 0
+        shell.blocks_free[:] = spec.pools[idx].total_blocks
+    if router is not None and fleet.controller is not None:
+        router.pools.set_thresholds(final_th)
+    telemetry.sample(t_req=n, now=t_end, lo=prev_req, hi=n)
+
+
+# ---------------------------------------------------------------------------
+# Vmapped sensitivity grids
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetGridResult:
+    """Columnar results of one vmapped fleet sweep (G grid lanes).
+
+    Per-lane reductions are computed on device over the *full* run (no
+    warm-up discard — grid metrics are for relative comparisons across
+    lanes; use a single-lane ``FleetSim`` run for paper-grade numbers).
+    Percentiles are linear-interpolation (``jnp.nanpercentile``), not the
+    nearest-rank convention of :func:`repro.sim.metrics.summarize`.
+    """
+
+    pool_names: tuple[str, ...]
+    thresholds: np.ndarray  # (G, P-1) initial boundary vectors
+    instances: np.ndarray  # (G, P) instance counts
+    completed: np.ndarray  # (G,)
+    rejected: np.ndarray  # (G,)
+    truncated: np.ndarray  # (G,)
+    preemptions: np.ndarray  # (G,) fleet total
+    routed: np.ndarray  # (G, P) dispatches per pool
+    ttft_mean: np.ndarray
+    ttft_p50: np.ndarray
+    ttft_p99: np.ndarray
+    tpot_mean: np.ndarray
+    tpot_p99: np.ndarray
+    makespan: np.ndarray  # (G,) max finish − min arrival
+    final_thresholds: np.ndarray  # (G, P-1) post-controller vectors
+    controller_moves: np.ndarray  # (G,)
+    #: (G, n) per-request record arrays when ``return_records=True``.
+    records: Optional[dict] = None
+
+    def __len__(self) -> int:
+        return len(self.completed)
+
+    def goodput(self) -> np.ndarray:
+        """Completed non-truncated requests per second, per lane."""
+        span = np.maximum(self.makespan, 1e-12)
+        return (self.completed - self.truncated) / span
+
+
+def _broadcast_axis(values, g: int, name: str):
+    if len(values) == 1:
+        return [values[0]] * g
+    if len(values) != g:
+        raise ValueError(
+            f"grid axis {name!r} has length {len(values)}, expected 1 or {g}"
+        )
+    return list(values)
+
+
+def run_fleet_grid(
+    trace,
+    pools: dict[str, tuple[PoolConfig, int]],
+    timing: TimingModel,
+    *,
+    thresholds: Optional[Sequence[Sequence[int]]] = None,
+    instances: Optional[Sequence[Sequence[int]]] = None,
+    gains: Optional[Sequence[Optional[dict]]] = None,
+    b_short: int = 8192,
+    calibrator: Optional[EmaCalibrator] = None,
+    epoch: int = 2048,
+    control_window: int = 512,
+    return_records: bool = False,
+) -> FleetGridResult:
+    """Run a whole sensitivity sweep as ONE vmapped device program.
+
+    Grid axes (all optional, zip semantics — length G or 1, broadcast):
+
+    ``thresholds``
+        Sequence of boundary vectors (each length P−1, pool-budget order).
+    ``instances``
+        Sequence of per-pool instance-count vectors (length P). Lanes run
+        padded to the max count with dead-lane masking, so mixed fleet
+        sizes share one compiled program.
+    ``gains``
+        Sequence of AIMD controller parameter dicts (keys ``b_min``,
+        ``increase_step``, ``decrease_factor``, ``error_rate_hi``,
+        ``overload_ratio_hi`` — defaults from :mod:`repro.core.adaptive`),
+        or ``None`` entries for uncontrolled lanes.
+
+    Budgets are precomputed once on the host — the EMA feedback trajectory
+    depends only on the observation stream, not on routing — so every lane
+    shares the same budget array and the sweep stays exact w.r.t. the
+    single-lane jax backend (asserted by the grid-parity test).
+    """
+    cols = (
+        trace
+        if isinstance(trace, TraceColumns)
+        else TraceColumns.from_requests(trace)
+    ).sorted_by_arrival()
+    n = len(cols)
+    if n == 0:
+        raise ValueError("run_fleet_grid needs a non-empty trace")
+
+    # Budget-ordered pool frame, like FleetSim.
+    ordered = sorted(pools.items(), key=lambda kv: kv[1][0].c_max)
+    names = tuple(name for name, _ in ordered)
+    base_inst = [int(ni) for _, (_, ni) in ordered]
+    configs = [cfg for _, (cfg, _) in ordered]
+    P = len(ordered)
+
+    if thresholds is None:
+        if set(names) == {"short", "long"}:
+            base_th = [min(b_short, configs[0].c_max)]
+        else:
+            base_th = [c.c_max for c in configs[:-1]]
+        thresholds = [base_th]
+    if instances is None:
+        instances = [base_inst]
+    if gains is None:
+        gains = [None]
+
+    g = max(len(thresholds), len(instances), len(gains))
+    thresholds = _broadcast_axis(list(thresholds), g, "thresholds")
+    instances = _broadcast_axis(list(instances), g, "instances")
+    gains = _broadcast_axis(list(gains), g, "gains")
+
+    th_arr = np.asarray(thresholds, np.int32).reshape(g, P - 1)
+    inst_arr = np.asarray(instances, np.int32).reshape(g, P)
+    any_ctrl = any(gn is not None for gn in gains)
+    ctrl_rows = []
+    for gn in gains:
+        row = {
+            "enabled": np.int32(0 if gn is None else 1),
+            "b_min": np.int32((gn or {}).get("b_min", 512)),
+            "step": np.int32(
+                (gn or {}).get("increase_step", DEFAULT_INCREASE_STEP)
+            ),
+            "factor": np.float32(
+                (gn or {}).get("decrease_factor", DEFAULT_DECREASE_FACTOR)
+            ),
+            "err_hi": np.float32(
+                (gn or {}).get("error_rate_hi", DEFAULT_ERROR_RATE_HI)
+            ),
+            "over_hi": np.float32(
+                (gn or {}).get("overload_ratio_hi", DEFAULT_OVERLOAD_RATIO_HI)
+            ),
+        }
+        ctrl_rows.append(row)
+    ctrl = {
+        k: np.stack([r[k] for r in ctrl_rows]) for k in ctrl_rows[0]
+    }
+
+    spec = _SimSpec(
+        pools=tuple(
+            _pool_spec(name, cfg, int(inst_arr[:, j].max()))
+            for j, (name, cfg) in enumerate(zip(names, configs))
+        ),
+        w=float(timing.w_base),
+        h=float(timing.h_per_seq),
+        prefill_chunk=int(timing.prefill_chunk),
+        win_size=int(control_window) if any_ctrl else 0,
+    )
+
+    budgets = None
+    if P > 1:
+        cal = calibrator or EmaCalibrator()
+        epoch_cap = (
+            max(1, min(epoch, control_window)) if any_ctrl else epoch
+        )
+        budgets, _ = precompute_budget_trajectory(cols, cal, epoch_cap=epoch_cap)
+
+    lane = {"th": th_arr, "ninst": inst_arr, "ctrl": ctrl}
+    with enable_x64():
+        out = _runner(spec, n, return_records, True)(
+            _trace_arrays(cols, budgets), lane
+        )
+        out = jax.tree_util.tree_map(np.asarray, out)
+
+    m = out["metrics"]
+    return FleetGridResult(
+        pool_names=names,
+        thresholds=th_arr,
+        instances=inst_arr,
+        completed=m["completed"].astype(np.int64),
+        rejected=m["rejected"].astype(np.int64),
+        truncated=m["truncated"].astype(np.int64),
+        preemptions=out["preempt"].sum(axis=1).astype(np.int64),
+        routed=m["routed"].astype(np.int64),
+        ttft_mean=m["ttft_mean"],
+        ttft_p50=m["ttft_p50"],
+        ttft_p99=m["ttft_p99"],
+        tpot_mean=m["tpot_mean"],
+        tpot_p99=m["tpot_p99"],
+        makespan=m["makespan"],
+        final_thresholds=out["th"].reshape(g, P - 1)[:, : P - 1],
+        controller_moves=out["moves"].astype(np.int64),
+        records=out.get("rec"),
+    )

@@ -53,6 +53,18 @@ class TimingModel:
         """
         return self.w_base + self.h_per_seq * n_active.astype(np.float64)
 
+    def constants_f64(self) -> tuple[np.ndarray, np.ndarray]:
+        """(W, H) as float64 scalars for device backends.
+
+        Event times are IEEE-754 double accumulations of ``W + H·n`` terms;
+        the jax backend (:mod:`repro.sim.jax_engine`) must carry them at
+        float64 (x64 mode) and multiply/add in the same order as
+        :meth:`iter_time` to stay bit-identical with the host backends.
+        Handing the constants out pre-coerced keeps that dtype discipline in
+        one place — a float32 W would silently poison every event time.
+        """
+        return np.float64(self.w_base), np.float64(self.h_per_seq)
+
     def iterations_for(self, l_in: int, l_out: int) -> int:
         """ceil(L_in/C) prefill iterations + L_out decode iterations."""
         return math.ceil(max(1, l_in) / self.prefill_chunk) + max(1, l_out)

@@ -21,14 +21,18 @@ re-expresses the *same* iteration semantics as dense NumPy arrays:
 Equivalence contract with the scalar engine
 -------------------------------------------
 Admission (head-of-line FIFO with block reservation), KV-block growth, and
-truncation are replicated exactly. The rare rounds where block growth would
-exceed ``blocks_free`` (the only place where within-iteration sequence order
-matters) fall back to a per-instance scalar emulation of the reference
-decode loop — including vLLM-style youngest-victim preemption-by-recompute —
-so preemption counts and victim choices match the reference engine
-decision-for-decision. ``tests/test_vector_engine.py`` asserts record-level
-equality on seeded preemption-heavy traces (with power-of-two timing
-constants so float accumulation is exact in both backends).
+truncation are replicated exactly. KV-pressure rounds — where block growth
+would exceed ``blocks_free`` — use the *order-free batch preemption rule*
+shared verbatim by all three backends (reference, vectorized, jax): advance
+→ truncate → completion credit → evict the minimal youngest-first prefix of
+decoding survivors whose freed blocks cover the growth deficit (vLLM-style
+preemption-by-recompute, enqueue-time descending with admission-order
+tie-break). Because the rule is a single batch decision per iteration, it
+vectorizes as a lexsort + cumsum masked pass here and as a ``jnp.where``
+victim-selection pass in :mod:`repro.sim.jax_engine`, with no scalar
+fallback. ``tests/test_vector_engine.py`` asserts record-level equality on
+seeded preemption-heavy traces (with power-of-two timing constants so float
+accumulation is exact in both backends).
 """
 
 from __future__ import annotations
@@ -349,48 +353,6 @@ class VectorPoolSim:
             self.seq_no[i, slot] = self._seq_counter
             self._seq_counter += 1
 
-    # -- preemption (exact mirror of InstanceSim._preempt_one) ---------------
-    def _preempt_one(self, i: int, alive: list[int], t: float = 0.0) -> bool:
-        victims = [
-            s
-            for s in alive
-            if self.prefill_remaining[i, s] == 0
-            and self.decode_remaining[i, s] > 0
-        ]
-        if not victims:
-            return False
-        # First-admitted among those with max enqueue time (= Python max()).
-        victim = victims[0]
-        for s in victims[1:]:
-            if self.enqueue[i, s] > self.enqueue[i, victim]:
-                victim = s
-        alive.remove(victim)
-        self.occupied[i, victim] = False
-        self.blocks_free[i] += self.blocks[i, victim]
-        self.blocks[i, victim] = 0
-        self.preemption_count += 1
-        if self.tracer is not None:
-            self.tracer.emit(
-                PREEMPT, t, self.pool_index, int(self.req_id[i, victim])
-            )
-        self.n_active[i] -= 1
-        # Recompute mode: restart prefill over prompt + generated-so-far,
-        # with the *original* output budget (reference engine semantics).
-        self.queues[i].appendleft(
-            (
-                int(self.req_id[i, victim]),
-                float(self.arrival[i, victim]),
-                int(self.input_tokens[i, victim] + self.generated[i, victim]),
-                int(self.output_tokens[i, victim]),
-                float(self.enqueue[i, victim]),
-                int(self.preempt_carried[i, victim]) + 1,
-            )
-        )
-        self.queue_len[i] += 1
-        self.state.queue_depth += 1
-        self.state.active -= 1
-        return True
-
     # -- fault application (repro.sim.faults) --------------------------------
     def install_faults(self) -> None:
         """Arm the per-round fault lanes (slowdown multiply, down masks)."""
@@ -477,74 +439,151 @@ class VectorPoolSim:
         k = min(n, max(1, int(np.ceil(evict_frac * n))))
         return self._drop_slots(i, order[n - k :], requeue)
 
-    # -- scalar fallback round (KV-pressure: order-dependent) ----------------
-    def _scalar_round(self, i: int, now: float, end: float) -> None:
-        """One exact reference-engine decode phase for instance ``i``.
+    # -- masked-lane pass for KV-pressure rounds (k == 1) --------------------
+    def _pressure_rows(
+        self,
+        gi: np.ndarray,
+        decp: np.ndarray,
+        now: np.ndarray,
+        t_it: np.ndarray,
+        end: np.ndarray,
+    ) -> None:
+        """Decode phase for lanes whose block growth exceeds ``blocks_free``.
 
-        Runs only on rounds where block growth may exceed ``blocks_free`` —
-        the single case where within-iteration sequence order (and therefore
-        youngest-victim preemption) affects the outcome.
+        Implements the order-free batch semantics shared with the reference
+        engine's ``step()`` and the jax backend's compiled round: advance
+        every decoding lane one token → truncate at C_max → completions free
+        their blocks (completion credit) → evict the minimal youngest-first
+        prefix of decoding survivors whose freed blocks cover the remaining
+        growth deficit → allocate growth. Victim selection is one lexsort +
+        cumsum pass per lane (``enqueue`` descending, admission order
+        tie-break) — no per-sequence Python loop, no dependence on
+        within-iteration sequence order.
         """
-        slots = np.flatnonzero(self.occupied[i])
-        alive = list(slots[np.argsort(self.seq_no[i, slots])])
         c_max = self.config.c_max
-        for s in list(alive):
-            if s not in alive:
-                continue  # evicted by an earlier sequence's preemption
-            if not (
-                self.prefill_remaining[i, s] == 0
-                and self.decode_remaining[i, s] > 0
-            ):
-                continue
-            if np.isnan(self.first_token[i, s]):
-                self.first_token[i, s] = end
-            self.generated[i, s] += 1
-            self.decode_remaining[i, s] -= 1
+        inp = self.input_tokens[gi]
+        gen = self.generated[gi] + decp  # a) advance one token
+        rem = self.decode_remaining[gi] - decp
+        ft = self.first_token[gi]
+        ft = np.where(decp & np.isnan(ft), (now + t_it)[:, None], ft)
 
-            need = _blocks_for(self.input_tokens[i, s] + self.generated[i, s])
-            while need > self.blocks[i, s]:
-                if self.blocks_free[i] > 0:
-                    self.blocks_free[i] -= 1
-                    self.blocks[i, s] += 1
-                else:
-                    if not self._preempt_one(i, alive, end):
-                        break
-                    if s not in alive:  # we were the victim
-                        break
-            if s not in alive:
-                continue
+        # b) context-window truncation at C_max mid-generation
+        trunc = decp & (inp + gen >= c_max) & (rem > 0)
+        rem = np.where(trunc, 0, rem)
+        trunc_all = self.truncated[gi] | trunc
+        self.truncation_count += int(trunc.sum())
+        if self.tracer is not None and trunc.any():
+            for ri, si in zip(*np.nonzero(trunc)):
+                self.tracer.emit(
+                    TRUNCATE,
+                    float(end[ri]),
+                    self.pool_index,
+                    int(self.req_id[gi[ri], si]),
+                )
 
-            context = self.input_tokens[i, s] + self.generated[i, s]
-            if context >= c_max and self.decode_remaining[i, s] > 0:
-                self.truncated[i, s] = True
-                self.decode_remaining[i, s] = 0
-                self.truncation_count += 1
+        self.generated[gi] = gen
+        self.decode_remaining[gi] = rem
+        self.first_token[gi] = ft
+        self.truncated[gi] = trunc_all
+
+        # c) completion credit: finished lanes release their blocks before
+        # growth is charged.
+        comp = decp & (rem == 0)
+        if comp.any():
+            ri, si = np.nonzero(comp)
+            ci = gi[ri]
+            self._records.add_bulk(
+                self.req_id[ci, si],
+                self.arrival[ci, si],
+                ft[ri, si],
+                end[ri],
+                gen[ri, si],
+                self.preempt_carried[ci, si],
+                trunc_all[ri, si],
+                np.zeros(len(ri), dtype=bool),
+            )
+            self._completed_ids.append(self.req_id[ci, si].copy())
+            np.add.at(self.blocks_free, ci, self.blocks[ci, si])
+            self.blocks[ci, si] = 0
+            self.occupied[ci, si] = False
+            done_per_row = np.bincount(ri, minlength=len(gi)).astype(np.int64)
+            self.n_active[gi] -= done_per_row
+            self.load[gi] -= done_per_row
+            self.state.active -= len(ri)
+
+        # d) growth deficit + minimal youngest-first prefix eviction
+        surv = decp & (rem > 0)
+        blk = self.blocks[gi]
+        need = np.where(
+            surv,
+            np.maximum(1, (inp + gen + (KV_BLOCK_TOKENS - 1)) // KV_BLOCK_TOKENS),
+            blk,
+        )
+        grow = np.where(surv, need - blk, 0)
+        demand = grow.sum(axis=1)
+        free = self.blocks_free[gi]
+
+        # Victim order per lane: enqueue descending (youngest first),
+        # admission order (seq_no) tie-break; non-candidates sort last.
+        keyq = np.where(surv, -self.enqueue[gi], np.inf)
+        order = np.lexsort((self.seq_no[gi], keyq), axis=1)
+        sblk = np.take_along_axis(np.where(surv, blk, 0), order, axis=1)
+        sgrow = np.take_along_axis(grow, order, axis=1)
+        # Evicting the first j victims frees cum(blocks) and cancels
+        # cum(grow); both sides are monotone in j, so the first prefix that
+        # covers the deficit is minimal. j == 0 means no eviction (growth
+        # fits once completion credit is applied).
+        okj = demand[:, None] - np.cumsum(sgrow, axis=1) <= (
+            free[:, None] + np.cumsum(sblk, axis=1)
+        )
+        j = np.where(demand <= free, 0, np.argmax(okj, axis=1) + 1)
+        evict = np.zeros_like(surv)
+        np.put_along_axis(
+            evict, order, np.arange(okj.shape[1])[None, :] < j[:, None], axis=1
+        )
+        evict &= surv
+
+        if evict.any():
+            self.preemption_count += int(evict.sum())
+            for r in np.flatnonzero(evict.any(axis=1)):
+                i = int(gi[r])
+                slots = np.flatnonzero(evict[r])
+                vorder = slots[np.argsort(self.seq_no[i, slots], kind="stable")]
                 if self.tracer is not None:
-                    self.tracer.emit(
-                        TRUNCATE, end, self.pool_index, int(self.req_id[i, s])
+                    for s in vorder:
+                        self.tracer.emit(
+                            PREEMPT,
+                            float(end[r]),
+                            self.pool_index,
+                            int(self.req_id[i, s]),
+                        )
+                self.blocks_free[i] += int(self.blocks[i, vorder].sum())
+                # Recompute mode: requeue at the head preserving admission
+                # order among the victim group, prompt += generated-so-far,
+                # original output budget (reference engine semantics).
+                for s in vorder[::-1]:
+                    self.queues[i].appendleft(
+                        (
+                            int(self.req_id[i, s]),
+                            float(self.arrival[i, s]),
+                            int(self.input_tokens[i, s] + gen[r, s]),
+                            int(self.output_tokens[i, s]),
+                            float(self.enqueue[i, s]),
+                            int(self.preempt_carried[i, s]) + 1,
+                        )
                     )
+                nv = len(vorder)
+                self.occupied[i, vorder] = False
+                self.blocks[i, vorder] = 0
+                self.n_active[i] -= nv
+                self.queue_len[i] += nv
+                self.state.queue_depth += nv
+                self.state.active -= nv
 
-            if self.decode_remaining[i, s] == 0:
-                alive.remove(s)
-                self.occupied[i, s] = False
-                self.blocks_free[i] += self.blocks[i, s]
-                self.n_active[i] -= 1
-                self.load[i] -= 1
-                self.state.active -= 1
-                ft = self.first_token[i, s]
-                self._records.add_one(
-                    int(self.req_id[i, s]),
-                    float(self.arrival[i, s]),
-                    float(end if np.isnan(ft) else ft),
-                    float(end),
-                    int(self.generated[i, s]),
-                    int(self.preempt_carried[i, s]),
-                    bool(self.truncated[i, s]),
-                    False,
-                )
-                self._completed_ids.append(
-                    np.asarray([self.req_id[i, s]], dtype=np.int64)
-                )
+        # e) allocate growth to the remaining survivors
+        keep = surv & ~evict
+        self.blocks_free[gi] -= np.where(keep, grow, 0).sum(axis=1)
+        self.blocks[gi] = np.where(keep, need, self.blocks[gi])
 
     # -- the vectorized round ------------------------------------------------
     def sweep(self, t_limit: float = np.inf) -> None:
@@ -713,9 +752,10 @@ class VectorPoolSim:
                 self.load[gv] -= done_per_row
                 self.state.active -= len(ri)
 
-        # -- exact scalar fallback for KV-pressure rounds --------------------
-        for j in np.flatnonzero(pressure):
-            self._scalar_round(int(rows[j]), float(now[j]), float(end[j]))
+        # -- masked-lane pass for KV-pressure rounds (k == 1) ----------------
+        pj = np.flatnonzero(pressure)
+        if len(pj):
+            self._pressure_rows(rows[pj], dec[pj], now[pj], t_it[pj], end[pj])
 
         # 3) Reschedule: wake at iteration end while work remains.
         alive_rows = (self.n_active[rows] > 0) | (self.queue_len[rows] > 0)

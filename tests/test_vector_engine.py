@@ -779,3 +779,316 @@ class TestFaultEquivalence:
         pol = RetryPolicy(max_retries=2, base_backoff=2**-6, max_backoff=2**-4, jitter=0.5, seed=9)
         ref, _ = self._assert_equal(trace, specs, policy=pol)
         assert ref.instance_failures == 3
+
+
+# ---------------------------------------------------------------------------
+# Third backend: jitted jax event loop + vmapped grids
+# ---------------------------------------------------------------------------
+
+
+class TestJaxBackendEquivalence:
+    """``backend="jax"`` joins the backend-equivalence contract: the
+    compiled event loop must be *bit-identical* to both host engines on the
+    exact class (routerless single pool, dyadic timing, ``coalesce_dt=0``)
+    — including the adversarial KV-pressure trace that drives the shared
+    order-free preemption rule hard."""
+
+    def _triple(self, trace, cfg, instances, *, total_blocks=None):
+        out = {}
+        for backend in ("reference", "vectorized", "jax"):
+            sim, res = run_single_pool(
+                trace, cfg, instances, backend, total_blocks=total_blocks
+            )
+            out[backend] = (sim, res)
+        return out
+
+    def test_basic_three_way_identical(self):
+        cfg = PoolConfig("p", 4096, 16)
+        trace = poisson_trace(600, 220.0, 7, l_in=(16, 1200), l_out=(1, 200))
+        runs = self._triple(trace, cfg, 3)
+        ref_tuples = record_tuples(*reversed(runs["reference"]))
+        for backend in ("vectorized", "jax"):
+            sim, res = runs[backend]
+            assert record_tuples(res, sim) == ref_tuples, backend
+            for f in SUMMARY_FIELDS:
+                assert getattr(res.summary, f) == getattr(
+                    runs["reference"][1].summary, f
+                ), (backend, f)
+
+    def test_kv_pressure_three_way_identical(self):
+        """Preemption/truncation heavy: tiny block pool forces constant
+        victim selection; all three backends must agree bit-for-bit."""
+        cfg = PoolConfig("p", 1024, 8)
+        trace = poisson_trace(500, 400.0, 3, l_in=(16, 900), l_out=(1, 400))
+        runs = self._triple(trace, cfg, 3, total_blocks=90)
+        ref_sim, ref = runs["reference"]
+        assert ref.preemptions > 100  # the trace exercises the hard path
+        assert ref.summary.truncated > 50
+        ref_tuples = record_tuples(ref, ref_sim)
+        for backend in ("vectorized", "jax"):
+            sim, res = runs[backend]
+            assert record_tuples(res, sim) == ref_tuples, backend
+            assert res.preemptions == ref.preemptions
+            assert res.truncations == ref.truncations
+
+    def test_submit_rejects_identical(self):
+        cfg = PoolConfig("p", 1024, 8)  # prompts ≥ 1024 → submit-time reject
+        trace = poisson_trace(300, 200.0, 5, l_in=(16, 2000), l_out=(1, 100))
+        runs = self._triple(trace, cfg, 2)
+        ref_tuples = record_tuples(*reversed(runs["reference"]))
+        assert runs["reference"][1].rejections > 0
+        for backend in ("vectorized", "jax"):
+            sim, res = runs[backend]
+            assert record_tuples(res, sim) == ref_tuples, backend
+            assert res.rejections == runs["reference"][1].rejections
+
+    def test_telemetry_windows_identical(self):
+        """Replayed device window snapshots must reproduce the host
+        backend's windowed time series exactly on the exact class."""
+        from repro.obs import TelemetryConfig
+
+        cfg = PoolConfig("p", 4096, 16)
+        trace = poisson_trace(1500, 250.0, 11)
+        tel = TelemetryConfig(window=100, events=False)
+        res = {}
+        for backend in ("vectorized", "jax"):
+            sim = FleetSim(
+                {"p": (cfg, 4)},
+                DYADIC,
+                backend=backend,
+                coalesce_dt=0.0,
+                telemetry=tel,
+                control_window=100,
+            )
+            res[backend] = sim.run(trace)
+        v, j = res["vectorized"].telemetry, res["jax"].telemetry
+        assert v.num_samples == j.num_samples > 0
+        assert set(v.columns) == set(j.columns)
+        for name in v.columns:
+            assert np.array_equal(
+                v.column(name), j.column(name), equal_nan=True
+            ), name
+
+    def test_jax_rejects_fault_injection(self):
+        from repro.sim.faults import FaultInjector, FaultSpec
+
+        cfg = PoolConfig("p", 4096, 16)
+        inj = FaultInjector((FaultSpec("crash", "p", instance=0, t=0.5),))
+        with pytest.raises(ValueError, match="fault injection"):
+            FleetSim({"p": (cfg, 2)}, DYADIC, backend="jax", injector=inj)
+
+    def test_jax_rejects_event_tracing(self):
+        from repro.obs import TelemetryConfig
+
+        cfg = PoolConfig("p", 4096, 16)
+        with pytest.raises(ValueError, match="event tracing"):
+            FleetSim(
+                {"p": (cfg, 2)},
+                DYADIC,
+                backend="jax",
+                telemetry=TelemetryConfig(window=64, events=True),
+            )
+
+
+class TestJaxRoutedTolerance:
+    """Routed fleets on the jax backend precompute EMA budgets host-side in
+    arrival order (the device loop only does a searchsorted per dispatch),
+    so routing is tolerance-equivalent to the host backends — same contract
+    the vectorized backend has vs the reference engine. Spillover is not
+    modeled on-device, so the host comparator runs with spillover off."""
+
+    @pytest.fixture(scope="class")
+    def results(self):
+        n, rate = 4000, 400.0
+        trace = generate_trace(
+            TraceSpec(trace="azure", num_requests=n, rate=rate, seed=42)
+        )
+        plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
+        pools = {
+            "short": (
+                PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
+                plan.short.instances,
+            ),
+            "long": (
+                PoolConfig("long", 65_536, 16, headroom=1.02),
+                plan.long.instances,
+            ),
+        }
+        vec = run_fleet(
+            trace, pools, A100_LLAMA3_70B, backend="vectorized", spillover=False
+        )
+        jx = run_fleet(
+            trace, pools, A100_LLAMA3_70B, backend="jax", spillover=False
+        )
+        return vec, jx
+
+    def test_completion_totals_close(self, results):
+        vec, jx = results
+        assert jx.summary.num_requests == vec.summary.num_requests
+        assert jx.summary.completed == pytest.approx(
+            vec.summary.completed, rel=0.01
+        )
+
+    def test_latency_percentiles_close(self, results):
+        vec, jx = results
+        assert jx.summary.ttft_p99 == pytest.approx(
+            vec.summary.ttft_p99, rel=0.15
+        )
+        assert jx.summary.tpot_p99 == pytest.approx(
+            vec.summary.tpot_p99, rel=0.15
+        )
+
+    def test_routing_fractions_close(self, results):
+        vec, jx = results
+        for name, frac in vec.router_stats["fractions"].items():
+            assert jx.router_stats["fractions"][name] == pytest.approx(
+                frac, abs=0.02
+            ), name
+
+    def test_every_request_accounted(self, results):
+        vec, jx = results
+        # every submitted request got exactly one routing decision, on both
+        # backends (the summaries themselves discard the 20% warm-up)
+        assert sum(jx.router_stats["routed"].values()) == 4000
+        assert sum(vec.router_stats["routed"].values()) == 4000
+
+
+class TestFleetGrid:
+    """``run_fleet_grid`` vmaps whole fleet runs across threshold /
+    instance-count / controller-gain axes. A grid lane must be bit-identical
+    to the same configuration run through ``FleetSim(backend="jax")`` — the
+    vmap axis cannot perturb the simulation."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.sim.jax_engine import run_fleet_grid
+
+        n, rate = 2000, 400.0
+        trace = generate_trace(
+            TraceSpec(trace="azure", num_requests=n, rate=rate, seed=42)
+        )
+        plan = plan_fleet("azure", trace, A100_LLAMA3_70B, rate)
+        pools = {
+            "short": (
+                PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05),
+                plan.short.instances,
+            ),
+            "long": (
+                PoolConfig("long", 65_536, 16, headroom=1.02),
+                plan.long.instances,
+            ),
+        }
+        grid = run_fleet_grid(
+            trace,
+            pools,
+            A100_LLAMA3_70B,
+            thresholds=[[2048], [4096], [8192]],
+            return_records=True,
+        )
+        return trace, pools, grid
+
+    def test_grid_lane_matches_single_run(self, setup):
+        trace, pools, grid = setup
+        sim = FleetSim(
+            dict(pools), A100_LLAMA3_70B, backend="jax", spillover=False
+        )
+        res = sim.run(trace)
+        k = 2  # thresholds [8192] == FleetSim's default b_short boundary
+        single = {}
+        for p in sim.pools.values():
+            a = p.record_arrays()
+            for j in range(len(a["request_id"])):
+                single[int(a["request_id"][j])] = (
+                    a["first_token"][j],
+                    a["finish"][j],
+                    int(a["output_tokens"][j]),
+                    int(a["preemptions"][j]),
+                    bool(a["truncated"][j]),
+                    bool(a["rejected"][j]),
+                )
+        order = np.argsort([r.arrival_time for r in trace], kind="stable")
+        ids = np.array([r.request_id for r in trace])[order]
+        rec = grid.records
+        for j, rid in enumerate(ids):
+            got = (
+                rec["first"][k, j],
+                rec["finish"][k, j],
+                int(rec["out"][k, j]),
+                int(rec["pre"][k, j]),
+                bool(rec["trunc"][k, j]),
+                bool(rec["rej"][k, j]),
+            )
+            assert got == single[int(rid)], rid
+        assert int(grid.routed[k, 0]) == res.router_stats["routed"]["short"]
+
+    def test_threshold_axis_is_monotone_in_routing(self, setup):
+        _, _, grid = setup
+        # raising the boundary can only move requests short-ward
+        short = grid.routed[:, 0]
+        assert (np.diff(short) >= 0).all()
+        assert (grid.routed.sum(axis=1) == len(grid.records["rej"][0])).all()
+
+    def test_instance_and_gain_axes(self, setup):
+        from repro.sim.jax_engine import run_fleet_grid
+
+        trace, pools, _ = setup
+        base = [ni for _, (_, ni) in sorted(
+            pools.items(), key=lambda kv: kv[1][0].c_max
+        )]
+        shrunk = [max(1, base[0] - 2), base[1]]
+        grid = run_fleet_grid(
+            trace,
+            pools,
+            A100_LLAMA3_70B,
+            thresholds=[[4096]],
+            instances=[base, shrunk],
+            gains=[None, {"decrease_factor": 0.5}],
+        )
+        assert len(grid) == 2
+        # fewer instances → no more completions than the full fleet
+        assert grid.completed[1] <= grid.completed[0]
+        # uncontrolled lane never moves; controlled lane stays clamped
+        assert grid.controller_moves[0] == 0
+        assert (grid.final_thresholds[0] == 4096).all()
+        b_min, c_max_short = 512, 8192
+        assert b_min <= int(grid.final_thresholds[1][0]) <= c_max_short
+
+    def test_bad_axis_length_raises(self, setup):
+        from repro.sim.jax_engine import run_fleet_grid
+
+        trace, pools, _ = setup
+        with pytest.raises(ValueError, match="grid axis"):
+            run_fleet_grid(
+                trace,
+                pools,
+                A100_LLAMA3_70B,
+                thresholds=[[2048], [4096]],
+                gains=[None, None, None],
+            )
+
+
+class TestKernelCaching:
+    """Routing/observe kernel specializations are cached by ``(name, …)``
+    keys; a second run with the same shapes must not retrace anything."""
+
+    def test_no_retrace_on_second_run(self):
+        from repro.core.calibration import kernel_trace_counts
+
+        cfg_s = PoolConfig("short", 8192, n_seq_for_cmax(8192), headroom=1.05)
+        cfg_l = PoolConfig("long", 65_536, 16, headroom=1.02)
+        trace = generate_trace(
+            TraceSpec(trace="azure", num_requests=800, rate=200.0, seed=9)
+        )
+        pools = {"short": (cfg_s, 2), "long": (cfg_l, 2)}
+
+        def one_run():
+            return run_fleet(
+                trace, pools, A100_LLAMA3_70B, backend="vectorized"
+            )
+
+        one_run()
+        before = kernel_trace_counts()
+        one_run()
+        after = kernel_trace_counts()
+        assert before  # kernels were exercised at all
+        assert after == before  # …and never retraced
