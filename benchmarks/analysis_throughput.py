@@ -1,0 +1,71 @@
+"""Analyzer throughput: wall-clock cost of the simlint CI gate.
+
+The static pass (`python -m repro.analysis src/`) runs as a blocking CI
+job, so its cost is part of the repo's iteration loop and gets tracked
+like any other perf row.  Emits one row::
+
+    simlint/src_repro,<us_per_pass>,files=<N>;findings=<K>;files_per_s=<F>
+
+Registered in ``benchmarks.run`` and folded into the CI `BENCH_sim.json`
+artifact by ``benchmarks.sim_throughput --json``.
+
+CLI::
+
+    python -m benchmarks.analysis_throughput
+    python -m benchmarks.analysis_throughput --json BENCH_simlint.json
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from benchmarks.common import emit, time_us, write_json
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def bench_simlint(repeats: int = 3) -> None:
+    from repro.analysis import analyze_paths, default_rules
+    from repro.analysis.core import analyze_files, iter_python_files, SourceFile
+
+    target = SRC / "repro"
+    findings = analyze_paths([target])
+    n_files = len(iter_python_files([target]))
+
+    def one_pass() -> None:
+        files = [SourceFile.load(p) for p in iter_python_files([target])]
+        analyze_files(files, default_rules())
+
+    us = time_us(one_pass, repeats=repeats, warmup=1)
+    files_per_s = n_files / (us / 1e6) if us > 0 else 0.0
+    emit(
+        "simlint/src_repro",
+        us,
+        f"files={n_files};findings={len(findings)};"
+        f"files_per_s={files_per_s:.0f}",
+    )
+
+
+def run() -> None:
+    """Aggregate-suite entry (`python -m benchmarks.run`)."""
+    bench_simlint()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--repeats", type=int, default=3)
+    parser.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="write the emitted rows as a JSON artifact (see benchmarks.common)",
+    )
+    args = parser.parse_args()
+    bench_simlint(repeats=args.repeats)
+    if args.json:
+        write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

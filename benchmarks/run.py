@@ -21,6 +21,7 @@ Modules:
   sim_throughput      — reference/vectorized/jax DES backend speedups
                         + vmapped run_fleet_grid sweep vs serial loop
   telemetry_smoke     — repro.obs telemetry schema + zero-overhead checks
+  analysis_throughput — simlint static-pass cost over src/repro
 
 Exits non-zero when any module fails (CI gates on this).
 """
@@ -46,6 +47,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        analysis_throughput,
         beyond_paper_adaptive,
         beyond_paper_int8kv,
         beyond_paper_threepool,
@@ -82,6 +84,7 @@ def main() -> None:
         roofline,
         sim_throughput,
         telemetry_smoke,
+        analysis_throughput,
     ]
     failed = 0
     errors: list[str] = []

@@ -405,6 +405,11 @@ def main() -> None:
     if args.grid:
         bench_grid_speedup(args.grid, seed=args.seed)
     if args.json:
+        # fold the simlint static-pass cost into the same artifact so the
+        # CI gate's price shows up next to the engine rows in BENCH_sim.json
+        from benchmarks.analysis_throughput import bench_simlint
+
+        bench_simlint()
         write_json(args.json)
 
 

@@ -1,0 +1,85 @@
+"""simlint: AST-based invariant checker for the three-tier DES contract.
+
+The simulator's core guarantees — bit-identical semantics across the
+``reference``/``vectorized``/``jax`` backends, float64 op-order
+discipline inside the jitted ``lax.while_loop``, and zero-cost-when-off
+telemetry/fault hooks — live in runtime equivalence suites that only
+catch drift when a test happens to exercise it.  ``repro.analysis``
+enforces the same contracts *statically*, at CI time, from source alone
+(stdlib-only: no numpy/jax import needed to run the pass).
+
+Usage::
+
+    python -m repro.analysis src/            # human-readable findings
+    python -m repro.analysis src/ --json report.json
+    python -m repro.analysis --list-rules
+    python -m repro.analysis --manifest      # dump the tolerance manifest
+
+Shipped rules (see each module's docstring for the precise semantics):
+
+``engine-parity``   counters, event kinds, and FleetResult fields match
+                    across the three engines, modulo the manifest.
+``guard-discipline``  tracer/telemetry/fault emissions dominated by
+                    ``is None`` guards (zero-cost-when-off).
+``dtype-discipline``  no float32-family constants / implicit-dtype jnp
+                    constructors / unwrapped roofline constants in
+                    f64-critical files; jit entries under enable_x64.
+``jit-purity``      no clocks, global RNG, print, or global mutation in
+                    jitted bodies; while_loop carry discipline.
+``event-schema``    obs event kinds and telemetry v1/v2 columns wired
+                    between events.py / timeseries.py / validate.py.
+
+Suppressions: append ``# simlint: disable=<rule>[,<rule>]`` to the
+flagged line (or the line above it); ``disable=all`` mutes every rule
+for that line.  Intentional jax-tier divergences belong in the
+*tolerance manifest* (`repro.analysis.manifest`) with a reason string,
+not in inline suppressions — the manifest is the machine-readable
+documentation of the tier contract (``--manifest`` dumps it).
+
+Adding a rule
+-------------
+1. Create ``src/repro/analysis/<rule>.py`` with a ``Rule`` subclass:
+   set ``name`` (kebab-case, used in suppressions) and ``description``;
+   implement ``check(self, sf)`` yielding ``Finding``s for one parsed
+   ``SourceFile``, or set ``project = True`` and implement
+   ``check_project(self, files)`` for cross-file checks.  Decorate the
+   class with ``@register``.  Findings should carry a ``hint`` that
+   tells the reader how to fix the violation (or where to declare the
+   tolerance).
+2. Import the module in ``core._ensure_builtin_rules`` so the registry
+   sees it.
+3. If the rule needs declared tolerances, give it a section in
+   ``manifest.DEFAULT_MANIFEST`` — every allowance with a reason
+   string — and read it via ``self.manifest`` so tests can inject
+   fixture manifests.
+4. Add fixture tests in ``tests/test_analysis.py``: one passing, one
+   violating, one suppressed — plus keep the repo-wide "simlint is
+   clean" smoke green (fix the repo or declare the tolerance).
+5. Document the rule in ROADMAP.md's simlint section.
+"""
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    SourceFile,
+    analyze_files,
+    analyze_paths,
+    default_rules,
+    register,
+    registered_rules,
+)
+from repro.analysis.manifest import DEFAULT_MANIFEST, manifest_dict, manifest_json
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "SourceFile",
+    "analyze_files",
+    "analyze_paths",
+    "default_rules",
+    "register",
+    "registered_rules",
+    "DEFAULT_MANIFEST",
+    "manifest_dict",
+    "manifest_json",
+]

@@ -1,0 +1,267 @@
+"""jit-purity/determinism: no side effects inside traced bodies.
+
+Functions handed to ``jax.jit``/``jax.vmap``/``lax.while_loop``/
+``lax.scan``/``lax.cond``/``lax.fori_loop`` trace once and replay; any
+wall-clock read, RNG draw from global state, ``print``, or ``global``
+mutation inside them is at best dead and at worst nondeterminism that
+breaks the seeded-replay guarantees the chaos/determinism CI checks
+rely on.  Jit scopes are discovered syntactically:
+
+* decorators: ``@jax.jit``, ``@jit``, ``@(functools.)partial(jax.jit, ...)``;
+* function names passed to the jit entry points above (``jax.jit(core)``,
+  ``lax.while_loop(cond_fn, body_fn, init)``);
+* transitive closure: local functions *called from* a jit scope in the
+  same module, and manifest-declared extra roots.
+
+Inside a jit scope this rule flags calls to ``time.*`` clocks,
+``np.random.*`` (module-level global RNG — ``default_rng``/``Generator``
+construction is allowed), ``random.*``, ``print``, ``input``, ``open``,
+and any ``global`` statement.  Additionally, every ``lax.while_loop``
+body must take exactly one carry parameter and return a value on every
+return path (shape-stable carry discipline).
+
+Determinism also applies outside jit: legacy global-state NumPy RNG
+calls (``np.random.seed``, ``np.random.rand``, ...) are flagged in any
+analyzed file — seeded ``np.random.default_rng`` generators are the
+repo-wide convention.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    SourceFile,
+    register,
+    unparse,
+)
+
+_JIT_ENTRY_ATTRS = {"jit", "vmap", "pmap", "while_loop", "scan", "cond", "fori_loop"}
+_RNG_OK = {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox"}
+_CLOCKS = {
+    "time.time",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.monotonic",
+    "time.process_time",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+}
+_IMPURE_NAMES = {"print", "input", "open"}
+
+
+def _callee_name(fn: ast.expr) -> str:
+    return unparse(fn)
+
+
+def _is_jit_entry(fn: ast.expr) -> bool:
+    """True for jax.jit / jnp-free lax.while_loop style callees."""
+    if isinstance(fn, ast.Attribute) and fn.attr in _JIT_ENTRY_ATTRS:
+        root = unparse(fn.value)
+        return root in ("jax", "lax", "jax.lax")
+    if isinstance(fn, ast.Name) and fn.id in ("jit", "vmap"):
+        return True
+    return False
+
+
+def _jit_decorated(fn_def: ast.AST) -> bool:
+    for dec in getattr(fn_def, "decorator_list", []):
+        if _is_jit_entry(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jit_entry(dec.func):
+                return True
+            # @functools.partial(jax.jit, ...) / @partial(jit, ...)
+            name = _callee_name(dec.func)
+            if name.endswith("partial") and dec.args and _is_jit_entry(dec.args[0]):
+                return True
+    return False
+
+
+@register
+class JitPurityRule(Rule):
+    name = "jit-purity"
+    description = (
+        "no clocks, global-state RNG, print, or global mutation inside "
+        "jitted bodies; while_loop carries take one parameter and always "
+        "return a value"
+    )
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        defs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+
+        jit_names: Set[str] = set()
+        for path, names in self.manifest.get("jit", {}).get("extra_roots", {}).items():
+            if sf.matches(path):
+                jit_names |= set(names)
+
+        while_bodies: List[ast.expr] = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) and _is_jit_entry(node.func):
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        jit_names.add(arg.id)
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "while_loop"
+                    and len(node.args) >= 2
+                ):
+                    while_bodies.append(node.args[1])
+
+        jit_defs: List[ast.AST] = [d for d in ast.walk(sf.tree)
+                                   if isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef))
+                                   and (_jit_decorated(d) or d.name in jit_names)]
+
+        # transitive closure over same-module calls from jit scopes
+        seen = {id(d) for d in jit_defs}
+        frontier = list(jit_defs)
+        while frontier:
+            cur = frontier.pop()
+            for node in ast.walk(cur):
+                if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                    for d in defs.get(node.func.id, []):
+                        if id(d) not in seen:
+                            seen.add(id(d))
+                            jit_defs.append(d)
+                            frontier.append(d)
+
+        for d in jit_defs:
+            findings.extend(self._check_jit_body(d, sf))
+
+        for body in while_bodies:
+            findings.extend(self._check_while_body(body, defs, sf))
+
+        findings.extend(self._check_global_rng(sf))
+        return findings
+
+    def _check_jit_body(self, fn_def: ast.AST, sf: SourceFile) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(fn_def):
+            if isinstance(node, ast.Global):
+                out.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.ident,
+                        line=node.lineno,
+                        message=(
+                            f"`global` mutation inside jitted body "
+                            f"`{fn_def.name}`"
+                        ),
+                        hint="thread state through the carry instead",
+                    )
+                )
+            elif isinstance(node, ast.Call):
+                name = _callee_name(node.func)
+                bad = None
+                if name in _CLOCKS:
+                    bad = f"wall-clock read `{name}()`"
+                elif name in _IMPURE_NAMES:
+                    bad = f"side-effecting call `{name}(...)`"
+                elif name.startswith("random."):
+                    # np.random.* is covered module-wide by _check_global_rng
+                    bad = f"global-state RNG call `{name}(...)`"
+                if bad is not None:
+                    out.append(
+                        Finding(
+                            rule=self.name,
+                            path=sf.ident,
+                            line=node.lineno,
+                            message=(
+                                f"{bad} inside jitted body `{fn_def.name}` "
+                                f"— traces once, replays stale/nondeterministic"
+                            ),
+                            hint=(
+                                "hoist out of the traced scope; use "
+                                "jax.random with an explicit key for "
+                                "in-graph randomness"
+                            ),
+                        )
+                    )
+        return out
+
+    def _check_while_body(
+        self, body_ref: ast.expr, defs: Dict[str, List[ast.AST]], sf: SourceFile
+    ) -> Iterable[Finding]:
+        targets: List[ast.AST] = []
+        if isinstance(body_ref, ast.Name):
+            targets = defs.get(body_ref.id, [])
+        elif isinstance(body_ref, ast.Lambda):
+            nargs = len(body_ref.args.args)
+            if nargs != 1:
+                return (
+                    Finding(
+                        rule=self.name,
+                        path=sf.ident,
+                        line=body_ref.lineno,
+                        message=(
+                            f"lax.while_loop body takes {nargs} parameters; "
+                            f"the carry is a single pytree"
+                        ),
+                        hint="pack state into one carry tuple/dict",
+                    ),
+                )
+            return ()
+        out: List[Finding] = []
+        for d in targets:
+            args = d.args
+            nargs = len(args.args) + len(args.posonlyargs)
+            if nargs != 1 or args.vararg or args.kwonlyargs:
+                out.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.ident,
+                        line=d.lineno,
+                        message=(
+                            f"lax.while_loop body `{d.name}` must take exactly "
+                            f"one carry parameter (got {nargs})"
+                        ),
+                        hint="pack state into one carry tuple/dict",
+                    )
+                )
+            for node in ast.walk(d):
+                if isinstance(node, ast.Return) and node.value is None:
+                    out.append(
+                        Finding(
+                            rule=self.name,
+                            path=sf.ident,
+                            line=node.lineno,
+                            message=(
+                                f"bare `return` in while_loop body `{d.name}` "
+                                f"— the carry must be returned on every path "
+                                f"with a stable shape"
+                            ),
+                            hint="return the updated carry",
+                        )
+                    )
+        return out
+
+    def _check_global_rng(self, sf: SourceFile) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _callee_name(node.func)
+            if name.startswith("np.random.") or name.startswith("numpy.random."):
+                tail = name.rsplit(".", 1)[1]
+                if tail not in _RNG_OK:
+                    out.append(
+                        Finding(
+                            rule=self.name,
+                            path=sf.ident,
+                            line=node.lineno,
+                            message=(
+                                f"legacy global-state RNG `{name}(...)` — "
+                                f"seeded determinism requires explicit "
+                                f"generators"
+                            ),
+                            hint="use np.random.default_rng(seed)",
+                        )
+                    )
+        return out
