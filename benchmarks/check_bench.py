@@ -1,0 +1,101 @@
+"""Blocking assertions over a BENCH_sim.json produced by sim_throughput.
+
+CI runs the throughput bench on every PR; this gate turns the two PR-10
+acceptance bars into exit codes instead of log lines someone has to read:
+
+* **Coalesced event jumps** — the compiled engine's outer while-loop
+  iteration count on the routed 1k-request class must stay ≤ n + 1 (one
+  drain + round step per arrival epoch plus the final drain). A
+  regression to per-token or per-round outer stepping shows up here as
+  thousands of iterations.
+* **Single-lane throughput** — the jax backend's steady-state wall on
+  the same class must be at most ``--ratio`` (default 1.1×) of the
+  vectorized backend's: the compiled tier is required to beat NumPy at
+  every scale, with 10% slack for shared-runner noise.
+
+Usage::
+
+    python -m benchmarks.check_bench BENCH_sim.json --requests 1000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _row(rows: list[dict], name: str) -> dict:
+    for r in rows:
+        if r.get("name") == name:
+            return r
+    raise SystemExit(f"check_bench: row `{name}` missing from bench output")
+
+
+def _derived(row: dict) -> dict:
+    d = row.get("derived")
+    if isinstance(d, dict):
+        return d
+    out: dict = {}
+    for part in str(row.get("derived_raw", "")).split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = float(v) if "." in v else int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def check(payload: dict, *, requests: int, ratio: float) -> list[str]:
+    rows = payload.get("rows", payload if isinstance(payload, list) else [])
+    failures: list[str] = []
+
+    jax = _row(rows, f"sim_throughput/jax/n={requests}")
+    vec = _row(rows, f"sim_throughput/vectorized/n={requests}")
+
+    iters = _derived(jax).get("jax_iters")
+    if iters is None:
+        failures.append("jax row carries no jax_iters derived metric")
+    elif not 0 < int(iters) <= requests + 1:
+        failures.append(
+            f"coalesced-jump regression: jax_iters={int(iters)} exceeds "
+            f"n+1={requests + 1} on the n={requests} routed class"
+        )
+
+    jw, vw = float(jax["us_per_call"]), float(vec["us_per_call"])
+    if jw > ratio * vw:
+        failures.append(
+            f"single-lane regression: jax wall {jw / 1e6:.2f}s > "
+            f"{ratio:.2f}x vectorized {vw / 1e6:.2f}s on n={requests}"
+        )
+    return failures
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("bench_json", help="BENCH_sim.json path")
+    parser.add_argument("--requests", type=int, default=1000)
+    parser.add_argument(
+        "--ratio",
+        type=float,
+        default=1.1,
+        help="max allowed jax/vectorized single-lane wall ratio",
+    )
+    args = parser.parse_args()
+
+    with open(args.bench_json) as fh:
+        payload = json.load(fh)
+    failures = check(payload, requests=args.requests, ratio=args.ratio)
+    for f in failures:
+        print(f"check_bench: FAIL — {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+    print(
+        f"check_bench: OK — jax_iters within n+1 and single-lane jax within "
+        f"{args.ratio:.2f}x vectorized on n={args.requests}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -101,12 +101,17 @@ DEFAULT_MANIFEST: dict = {
     },
     # ------------------------------------------------------------------
     # dtype-discipline: float64 op-order contract for DES time math.
-    # Scoped to the compiled engine; device kernels (repro/kernels/*)
-    # pick compute precision explicitly per accelerator (f32/bf16
-    # accumulators) and are outside the event-time contract.
+    # Scoped to the compiled engine plus the one device kernel that IS
+    # event-time math (repro/kernels/sim_decode.py — its jnp twin and
+    # Pallas body must accumulate bit-identical float64 event times).
+    # Other device kernels pick compute precision explicitly per
+    # accelerator (f32/bf16 accumulators) and stay outside the contract.
     # ------------------------------------------------------------------
     "dtype": {
-        "files": ["repro/sim/jax_engine.py"],
+        "files": [
+            "repro/sim/jax_engine.py",
+            "repro/kernels/sim_decode.py",
+        ],
         "float32_scope_ok": {
             "repro/sim/jax_engine.py": {
                 "window_step": "in-step AIMD controller mirror keeps gains "
@@ -121,14 +126,21 @@ DEFAULT_MANIFEST: dict = {
                 "float32 by the CalibState contract (core/calibration.py); "
                 "the output is int32 budgets, never event-time math — "
                 "cold-start parity tests bound it",
+                "_abstract_inputs": "abstract avals for AOT lowering mirror "
+                "window_step's float32 controller-gain lanes; no runtime "
+                "values flow through them",
             }
         },
         "const_attrs": ["w_base", "h_per_seq"],
         "const_wrappers": ["float", "np.float64", "jnp.float64"],
-        "x64_entries": {"repro/sim/jax_engine.py": ["_runner"]},
-        "kernels_note": "repro/kernels/* excluded: pallas kernels choose "
-        "their own compute precision; the f64 contract covers DES event "
-        "times, which flow through timing.constants_f64()",
+        "x64_entries": {
+            "repro/sim/jax_engine.py": ["_runner", "_aot"],
+        },
+        "kernels_note": "repro/kernels/* excluded except sim_decode.py: "
+        "pallas compute kernels (attention, scan) choose their own "
+        "compute precision, but sim_decode advances DES event times and "
+        "must hold the same float64 op-order contract as the engines; "
+        "event-time constants flow through timing.constants_f64()",
     },
     # ------------------------------------------------------------------
     # jit-purity: extra jit roots not discoverable syntactically

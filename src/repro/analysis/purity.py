@@ -9,7 +9,9 @@ rely on.  Jit scopes are discovered syntactically:
 
 * decorators: ``@jax.jit``, ``@jit``, ``@(functools.)partial(jax.jit, ...)``;
 * function names passed to the jit entry points above (``jax.jit(core)``,
-  ``lax.while_loop(cond_fn, body_fn, init)``);
+  ``lax.while_loop(cond_fn, body_fn, init)``) — including Pallas kernel
+  bodies handed to ``pl.pallas_call``, also when wrapped in a
+  ``(functools.)partial(kernel, ...)`` call for static parameters;
 * transitive closure: local functions *called from* a jit scope in the
   same module, and manifest-declared extra roots.
 
@@ -58,11 +60,13 @@ def _callee_name(fn: ast.expr) -> str:
 
 
 def _is_jit_entry(fn: ast.expr) -> bool:
-    """True for jax.jit / jnp-free lax.while_loop style callees."""
+    """True for jax.jit / lax.while_loop / pl.pallas_call style callees."""
     if isinstance(fn, ast.Attribute) and fn.attr in _JIT_ENTRY_ATTRS:
         root = unparse(fn.value)
         return root in ("jax", "lax", "jax.lax")
-    if isinstance(fn, ast.Name) and fn.id in ("jit", "vmap"):
+    if isinstance(fn, ast.Attribute) and fn.attr == "pallas_call":
+        return unparse(fn.value) in ("pl", "pallas", "jax.experimental.pallas")
+    if isinstance(fn, ast.Name) and fn.id in ("jit", "vmap", "pallas_call"):
         return True
     return False
 
@@ -108,6 +112,14 @@ class JitPurityRule(Rule):
                 for arg in node.args:
                     if isinstance(arg, ast.Name):
                         jit_names.add(arg.id)
+                    elif (
+                        isinstance(arg, ast.Call)
+                        and _callee_name(arg.func).endswith("partial")
+                        and arg.args
+                        and isinstance(arg.args[0], ast.Name)
+                    ):
+                        # pl.pallas_call(partial(kernel, c_max=...), ...)
+                        jit_names.add(arg.args[0].id)
                 if (
                     isinstance(node.func, ast.Attribute)
                     and node.func.attr == "while_loop"

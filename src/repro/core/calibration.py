@@ -285,6 +285,33 @@ def _update_stream_kernel(chunk: int, beta: float):
     return jax.jit(fold)
 
 
+@functools.lru_cache(maxsize=None)
+def _estimate_budget_kernel(chunk: int, gamma: float):
+    """Cached jitted Eq. 3 budget estimate, specialized per ``(chunk, γ)``.
+
+    The compiled DES backend precomputes per-request budgets on the host
+    by folding the trace through ramped epochs
+    (:func:`repro.sim.jax_engine.precompute_budget_trajectory`); each
+    epoch pads to its ramp width and calls this kernel once instead of
+    dispatching the eager estimate ops per chunk. Keyed
+    ``("estimate", chunk, γ)`` in :func:`kernel_trace_counts`.
+    """
+    key = ("estimate", chunk, gamma)
+
+    def kernel(
+        state: CalibState,
+        byte_lens: jax.Array,
+        max_output_tokens: jax.Array,
+        categories: jax.Array,
+    ) -> jax.Array:
+        _count_trace(key)  # runs at trace time only
+        return jax_estimate_budget(
+            state, byte_lens, max_output_tokens, categories, gamma=gamma
+        )
+
+    return jax.jit(kernel)
+
+
 def jax_conservative_ratio(
     state: CalibState, *, gamma: float = DEFAULT_GAMMA
 ) -> jax.Array:

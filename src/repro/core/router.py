@@ -286,6 +286,21 @@ class TokenBudgetRouter:
 SHORT, LONG = 0, 1
 
 
+def jax_pool_ids(thresholds: jax.Array, budgets: jax.Array) -> jax.Array:
+    """Budget → pool-index dispatch: ``searchsorted`` over ``B_1 < … <
+    B_{P-1}`` (Algorithm 1's static threshold search), int32 ids into the
+    budget-ordered pool family.
+
+    The single routing decision shared by every vectorized path: the
+    batch routing kernel below and the compiled DES backend's in-loop
+    dispatch (:mod:`repro.sim.jax_engine`) both call it, so the device
+    simulators route bit-identically to :func:`jax_route_batch`.
+    """
+    return jnp.searchsorted(thresholds, budgets, side="left").astype(
+        jnp.int32
+    )
+
+
 @functools.lru_cache(maxsize=None)
 def _route_batch_kernel(num_thresholds: int, dtype: str):
     """Cached jitted Eq. 3 estimate + N-way threshold search, specialized
@@ -312,10 +327,7 @@ def _route_batch_kernel(num_thresholds: int, dtype: str):
         budgets = jax_estimate_budget(
             state, byte_lens, max_output_tokens, categories, gamma=gamma
         )
-        pools = jnp.searchsorted(thresholds, budgets, side="left").astype(
-            jnp.int32
-        )
-        return pools, budgets
+        return jax_pool_ids(thresholds, budgets), budgets
 
     return jax.jit(kernel)
 

@@ -1,11 +1,21 @@
 """Pallas TPU kernels for the serving hot spots, with jnp oracles.
 
-* ``flash_attention`` — prefill causal attention (GQA via index-map folding)
-* ``paged_attention`` — decode over block-table KV pages (vLLM→TPU port)
-* ``ssd_scan``        — Mamba-2 chunked state-space scan
+* ``flash_attention``      — prefill causal attention (GQA via index-map
+  folding)
+* ``paged_attention``      — decode over block-table KV pages (vLLM→TPU
+  port)
+* ``ssd_scan``             — Mamba-2 chunked state-space scan
+* ``decode_advance_pallas`` — the jax DES backend's fused decode-advance
+  round (one program per instance row), with ``decode_advance_jnp`` as
+  its bit-identical jnp twin/oracle
 
-Validated with ``interpret=True`` on CPU against :mod:`repro.kernels.ref`;
-compiled by Mosaic on real TPU backends.
+Validated with ``interpret=True`` on CPU against :mod:`repro.kernels.ref`
+(attention/scan, numeric tolerance) and the jnp twin (sim_decode,
+bit-identity); compiled by Mosaic on real TPU backends. Off-TPU the
+kernels default to interpreter mode so CPU CI still executes the kernel
+bodies — ``sim_decode`` additionally keeps the jnp twin as the engine's
+default off-TPU path because its float64 event-time contract has no
+native TPU execution yet (``REPRO_SIM_PALLAS=1`` forces the kernel).
 """
 
 from jax.experimental.pallas import tpu as _pltpu
@@ -17,6 +27,14 @@ if not hasattr(_pltpu, "CompilerParams"):  # pragma: no cover - version shim
     _pltpu.CompilerParams = _pltpu.TPUCompilerParams
 
 from repro.kernels.ops import flash_attention, paged_attention, ssd_scan
+from repro.kernels.sim_decode import decode_advance_jnp, decode_advance_pallas
 from repro.kernels import ref
 
-__all__ = ["flash_attention", "paged_attention", "ssd_scan", "ref"]
+__all__ = [
+    "flash_attention",
+    "paged_attention",
+    "ssd_scan",
+    "decode_advance_jnp",
+    "decode_advance_pallas",
+    "ref",
+]

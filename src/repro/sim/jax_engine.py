@@ -24,10 +24,14 @@ Identical to the host backends at ``coalesce_dt=0`` (per-arrival sync):
   — the entry points run under ``jax.experimental.enable_x64``);
 * the shared order-free batch preemption rule (advance → truncate →
   completion credit → evict the minimal youngest-first prefix of decoding
-  survivors → allocate growth) as a ``lexsort`` + ``cumsum`` +
-  ``jnp.where`` victim-selection pass — the same pass the NumPy engine
-  runs, so routerless single-pool runs are *bit-identical* to both host
-  backends (asserted by ``tests/test_vector_engine.py``).
+  survivors → allocate growth) as a *sort-free* victim-selection pass:
+  pairwise-comparison ranks and masked prefix sums over the tiny
+  ``(S, S)`` slot square replace the host tier's ``lexsort`` + ``cumsum``
+  (XLA:CPU sorts, batched gathers, and batched scatters all lower to
+  ~40–50 µs serial loops inside a while body; the one-hot reduces fuse).
+  The selected victims are identical, so routerless single-pool runs are
+  *bit-identical* to both host backends (asserted by
+  ``tests/test_vector_engine.py``).
 
 FIFO queues are request-indexed linked lists (``q_next[rid]`` + per
 instance head/tail); preempted sequences go to a bounded per-instance
@@ -35,18 +39,66 @@ victim stash that the admission loop drains before the FIFO (capacity
 ``n_seq`` suffices: FIFO admits only while the stash is empty, so
 ``n_active + stash ≤ n_seq`` is invariant).
 
+Carry layout and donation contract
+----------------------------------
+The run is three nested ``lax.while_loop``\\ s with deliberately *small*
+carries — under ``vmap`` every loop iteration pays a masked select over
+its whole carry, so what rides each carry is the backend's main cost
+model (``benchmarks/sim_throughput.py`` tracks the byte totals as
+``carry_bytes`` / ``sweep_carry_bytes`` / ``drain_carry_bytes``):
+
+* **outer epoch loop** — one iteration per arrival burst: drain all
+  arrivals that precede the next instance wake, then sweep rounds until
+  the next arrival. Iteration count is surfaced as ``iters`` (bounded by
+  ``n + 1``: every non-final epoch dispatches at least one arrival).
+* **arrival drain** — carries only dispatch state: the FIFO linked
+  lists, per-instance ``load``/``wake``, controller/window state, and
+  the single ``(n+1,)`` pool-assignment record. No ``(I, S)`` slot
+  arrays, no other record columns.
+* **round sweep** — carries the slot arrays plus exactly the record
+  columns that completion scatters write (``first``/``finish``/``out``/
+  ``pre``/``trunc``) and the admission-reject staging column ``rejt``.
+  Iteration count is surfaced as ``rounds`` (the pre-coalescing outer
+  loop ran one round per outer iteration, so ``rounds / iters`` is the
+  measured coalescing factor).
+
+Per-request record arrays live in **preallocated donated buffers**: the
+compiled entry takes a third argument ``rec0`` (see ``_fresh_records``)
+that is donated to XLA (``jax.jit(..., donate_argnums=(2,))``), so the
+in-loop scatters update the caller's buffers in place instead of copying
+the record tree through every call. Callers must therefore pass *fresh*
+buffers on every call and never reuse a previously-donated array — both
+entry points allocate via ``_fresh_records`` per call, which the
+donated-buffer parity tests pin down. Submit-time rejection is a pure
+function of the recorded pool id and the trace, and admission-time
+rejection is staged as a reject *timestamp* (``rejt``, +inf = not
+rejected), so the boolean ``rej`` column and the reject first/finish
+times are folded in once after the loop rather than scattered inside it.
+
+The executables themselves are compiled ahead of time and cached
+(:func:`aot_compile` / ``_aot``): ``.lower().compile()`` under
+``enable_x64`` keyed by the static ``(spec, n, grid, g)`` shape, with
+wall-clock lower/compile times recorded in ``_COMPILE_STATS`` so the
+benchmark's ``jax_compile`` row measures compilation alone. The hot
+decode-advance pass is shared with :mod:`repro.kernels.sim_decode`,
+which provides a jnp twin (default on CPU/GPU hosts) and a Pallas kernel
+(default on TPU; force with ``REPRO_SIM_PALLAS=1``, interpreter mode off
+TPU) — both bit-identical, selected at trace time per ``_pallas_enabled``.
+
 Routing, calibration, and control
 ---------------------------------
 * **Routing** is fused into the dispatch branch as a ``searchsorted``
-  against the *carried* threshold vector — honest under threshold /
-  controller vmap axes. Per-request budgets are precomputed on the host
-  by folding the byte-length observation stream through the cached
-  EMA kernels (:func:`precompute_budget_trajectory`) in arrival order
-  with the same ramped epoch schedule the vectorized backend uses.
-  Approximations vs the host routed path (documented, tolerance-class):
-  feedback folds arrival-ordered trace observations instead of
-  completion-ordered ones, and load-dependent spillover is off (static
-  N-way + hard-constraint clamp only).
+  against the *carried* threshold vector (shared helper
+  :func:`repro.core.router.jax_pool_ids` — the same decision the batch
+  routing kernel makes) — honest under threshold / controller vmap axes.
+  Per-request budgets are precomputed on the host by folding the
+  byte-length observation stream through the cached EMA kernels
+  (:func:`precompute_budget_trajectory`) in arrival order with the same
+  ramped epoch schedule the vectorized backend uses. Approximations vs
+  the host routed path (documented, tolerance-class): feedback folds
+  arrival-ordered trace observations instead of completion-ordered ones,
+  and load-dependent spillover is off (static N-way + hard-constraint
+  clamp only).
 * **Adaptive control** mirrors :class:`repro.core.adaptive.AdaptiveController`
   in-step: the same AIMD decision rule, constants, and strict-ordering
   clamp run inside the compiled dispatch branch on the same
@@ -68,6 +120,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import time
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -85,10 +140,13 @@ from repro.core.adaptive import (
 )
 from repro.core.calibration import (
     EmaCalibrator,
-    jax_estimate_budget,
-    jax_update_stream,
+    _count_trace,
+    _estimate_budget_kernel,
+    _update_stream_kernel,
 )
 from repro.core.pools import KV_BLOCK_TOKENS, PoolConfig, TOTAL_KV_BLOCKS
+from repro.core.router import jax_pool_ids
+from repro.kernels.sim_decode import decode_advance_jnp, decode_advance_pallas
 from repro.sim.engine import _blocks_for
 from repro.sim.timing import TimingModel
 from repro.traces.generator import TraceColumns
@@ -96,6 +154,46 @@ from repro.traces.generator import TraceColumns
 #: Sentinels for "no constraint" in masked min-reductions (int32-safe).
 _BIG_I = 1 << 30
 _BIG_F = 1.0e18
+
+#: Donated record buffers (name, dtype, width). Same-dtype columns are
+#: packed along a trailing width axis so each completion round issues
+#: one scatter per buffer instead of one per column — XLA:CPU charges
+#: ~40 µs per batched scatter inside a while body regardless of row
+#: width. ``recf`` packs [first_token, finish]; ``reci`` packs
+#: [out_tokens, preemptions, truncated(0/1)]. ``rejt`` stages the
+#: admission-reject timestamp (+inf = not rejected); the boolean ``rej``
+#: column is derived post-loop, so it never rides a loop carry.
+_REC_DTYPES = (
+    ("recf", np.float64, 2),
+    ("reci", np.int32, 3),
+    ("pool", np.int32, 1),
+    ("rejt", np.float64, 1),
+)
+
+#: Per-pool state that the arrival drain actually mutates (FIFO lists,
+#: load-balance picks, wake seeding, submit-reject counter). Everything
+#: else is loop-invariant during a drain and stays out of its carry.
+_DRAIN_POOL_KEYS = ("qnext", "qh", "qt", "qlen", "load", "wake", "nrej")
+
+#: Test hook: force the Pallas decode path on (True) / off (False).
+_PALLAS_FORCE: Optional[bool] = None
+
+
+def _pallas_enabled() -> bool:
+    """Decode-advance path selection (part of the executable cache key).
+
+    Defaults to the Pallas kernel only on TPU (where it compiles via
+    Mosaic); hosts use the jnp twin — running the interpreter inside the
+    hot compiled loop would be pure overhead. ``REPRO_SIM_PALLAS=1``
+    forces the kernel (interpreter mode off-TPU; used by the parity
+    tests), ``=0`` forces it off.
+    """
+    if _PALLAS_FORCE is not None:
+        return bool(_PALLAS_FORCE)
+    env = os.environ.get("REPRO_SIM_PALLAS")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "off")
+    return jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -135,17 +233,154 @@ def _pool_spec(name: str, cfg: PoolConfig, max_inst: int) -> _PoolSpec:
 
 
 # ---------------------------------------------------------------------------
+# Carry construction (shared by the compiled core and the size probe)
+# ---------------------------------------------------------------------------
+
+
+def _init_pools(spec: _SimSpec, n: int) -> dict:
+    """Stacked ``(P, I, S)`` pool state — one pytree for every pool.
+
+    Pools are padded to the widest instance/slot counts so a single
+    traced round body covers all of them (the XLA:CPU backend is
+    op-dispatch bound, so P separately-traced pool bodies cost ~P× one
+    stacked body). Padding is inert by construction: padded slots are
+    unoccupied and guarded by the per-pool ``n_seq`` admission cap,
+    padded instances never wake (``wake = inf``) and contribute zero
+    free blocks to the telemetry sums.
+    """
+    i32 = jnp.int32
+    f64 = jnp.float64
+    P = len(spec.pools)
+    I = max(ps.max_inst for ps in spec.pools)
+    S = max(ps.n_seq for ps in spec.pools)
+    ivalid = np.arange(I)[None, :] < np.asarray(
+        [ps.max_inst for ps in spec.pools]
+    )[:, None]
+    tblocks = np.asarray([ps.total_blocks for ps in spec.pools], np.int32)
+    z2 = jnp.zeros((P, I, S), i32)
+    return {
+        "occ": jnp.zeros((P, I, S), bool),
+        "rid": jnp.full((P, I, S), -1, i32),
+        "enq": jnp.zeros((P, I, S), f64),
+        "inp": z2,
+        "outp": z2,
+        "pre": z2,
+        "rem": z2,
+        "gen": z2,
+        "blk": z2,
+        "ft": jnp.full((P, I, S), jnp.nan, f64),
+        "tr": jnp.zeros((P, I, S), bool),
+        "pc": z2,
+        "sq": z2,
+        "free": jnp.asarray(
+            np.where(ivalid, tblocks[:, None], 0), i32
+        ),
+        "wake": jnp.full((P, I), jnp.inf, f64),
+        "nact": jnp.zeros((P, I), i32),
+        "qlen": jnp.zeros((P, I), i32),
+        "load": jnp.zeros((P, I), i32),
+        "qh": jnp.full((P, I), -1, i32),
+        "qt": jnp.full((P, I), -1, i32),
+        "qnext": jnp.full((P, n + 1), -1, i32),
+        "vrid": jnp.zeros((P, I, S), i32),
+        "vinp": jnp.zeros((P, I, S), i32),
+        "vpc": jnp.zeros((P, I, S), i32),
+        "vcnt": jnp.zeros((P, I), i32),
+        "sqc": jnp.zeros((P,), i32),
+        "npre": jnp.zeros((P,), i32),
+        "nrej": jnp.zeros((P,), i32),
+        "ntr": jnp.zeros((P,), i32),
+    }
+
+
+def _init_windows(P: int, nb: int, win_cap: int) -> dict:
+    i32 = jnp.int32
+    f64 = jnp.float64
+    return {
+        "t_req": jnp.zeros((win_cap,), i32),
+        "now": jnp.zeros((win_cap,), f64),
+        "th": jnp.zeros((win_cap, nb), i32),
+        "queue": jnp.zeros((win_cap, P), i32),
+        "active": jnp.zeros((win_cap, P), i32),
+        "freeb": jnp.zeros((win_cap, P), i32),
+        "pre": jnp.zeros((win_cap, P), i32),
+        "rej": jnp.zeros((win_cap, P), i32),
+        "trunc": jnp.zeros((win_cap, P), i32),
+    }
+
+
+def _fresh_records(n: int, g: Optional[int] = None) -> dict:
+    """Freshly-zeroed donated record buffers for one compiled call.
+
+    Donation contract: these arrays are consumed by the executable —
+    allocate a new set per call, never hand back a previously-donated
+    buffer. ``rejt`` is +inf-filled (no admission reject)."""
+    base = (n + 1,) if g is None else (g, n + 1)
+    buf = {}
+    for name, dt, w in _REC_DTYPES:
+        shape = base if w == 1 else base + (w,)
+        buf[name] = (
+            np.full(shape, np.inf, dt)
+            if name == "rejt"
+            else np.zeros(shape, dt)
+        )
+    return buf
+
+
+def _unpack_records(rec: dict, n: int) -> dict:
+    """Split the packed record buffers back into named host columns.
+
+    Handles single-lane ``(n + 1, …)`` and grid ``(g, n + 1, …)``
+    shapes alike (the request axis is always the one sliced by ``:n``,
+    dropping the scratch row)."""
+    rf = rec["recf"][..., :n, :]
+    ri = rec["reci"][..., :n, :]
+    return {
+        "first": rf[..., 0],
+        "finish": rf[..., 1],
+        "out": ri[..., 0],
+        "pre": ri[..., 1],
+        "trunc": ri[..., 2].astype(bool),
+        "pool": rec["pool"][..., :n],
+        "rejt": rec["rejt"][..., :n],
+        "rej": rec["rej"][..., :n],
+    }
+
+
+# ---------------------------------------------------------------------------
 # The compiled core
 # ---------------------------------------------------------------------------
 
 
-def _make_core(spec: _SimSpec, n: int, return_records: bool):
+def _make_core(
+    spec: _SimSpec,
+    n: int,
+    return_records: bool,
+    use_pallas: bool,
+    gate: bool = True,
+):
     """Build the single-lane simulation function for one (spec, n).
 
-    Returned function signature: ``core(trace, lane) -> dict`` where
-    ``trace`` holds shared arrival-ordered arrays and ``lane`` the
-    per-lane (vmappable) parameters. Must be traced/executed inside an
+    Returned function signature: ``core(trace, lane, rec0) -> dict``
+    where ``trace`` holds shared arrival-ordered arrays, ``lane`` the
+    per-lane (vmappable) parameters, and ``rec0`` the donated record
+    buffers (see ``_fresh_records``). Must be traced/executed inside an
     ``enable_x64()`` context — event times are float64 accumulations.
+
+    The pool state is a single stacked ``(P, I, S)`` pytree (see
+    ``_init_pools``) so one traced round body covers every pool — on the
+    op-dispatch-bound XLA:CPU backend P separately-traced bodies cost
+    ~P× as much.
+
+    ``gate`` short-circuits the eviction pass with ``lax.cond`` when no
+    instance is over budget; the skipped branch is bit-identical to the
+    masked pass (``jsel = 0`` evicts nothing), so gating never changes
+    results — but under ``vmap`` a batched ``cond`` runs both branches
+    anyway, so ``_runner`` disables it for grid mode. ``gate`` also
+    selects the outer-loop shape: nested drain→sweep epochs for the
+    single-lane path, drain + exactly one round per outer iteration for
+    vmapped grids (a nested sweep loop would run to the max round count
+    over lanes per epoch — a measured 5.6× lockstep blowup at G=16).
     """
     P = len(spec.pools)
     win = spec.win_size
@@ -156,229 +391,276 @@ def _make_core(spec: _SimSpec, n: int, return_records: bool):
     W = np.float64(spec.w)
     H = np.float64(spec.h)
     CHUNK = spec.prefill_chunk
+    I = max(ps.max_inst for ps in spec.pools)
+    S = max(ps.n_seq for ps in spec.pools)
+    # Per-pool parameters as (P,) closure constants over the stacked
+    # state (dtype-pinned so padding arithmetic stays int32).
+    cmax_v = jnp.asarray([ps.c_max for ps in spec.pools], jnp.int32)
+    nseq_v = jnp.asarray([ps.n_seq for ps in spec.pools], jnp.int32)
+    tblk_v = jnp.asarray(
+        [ps.total_blocks for ps in spec.pools], jnp.int32
+    )
+    pg2 = jnp.arange(P)[:, None]
+    ig2 = jnp.arange(I)[None, :]
+
+    if use_pallas:
+        # The Pallas kernel takes c_max as a static compile-time
+        # parameter, so the stacked decode runs one kernel call per
+        # pool and restacks (CI-parity path; the jnp twin below is the
+        # default off-TPU).
+        _advance_p = tuple(
+            functools.partial(
+                decode_advance_pallas, w=W, h=H, chunk=CHUNK, c_max=ps.c_max
+            )
+            for ps in spec.pools
+        )
+
+        def advance_all(t_limit, *args):
+            outs = [
+                _advance_p[p](t_limit, *(a[p] for a in args))
+                for p in range(P)
+            ]
+            return {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+
+    else:
+        _advance_1 = functools.partial(
+            decode_advance_jnp, w=W, h=H, chunk=CHUNK
+        )
+
+        def advance_all(t_limit, *args):
+            # One vmapped twin over the pool axis; c_max rides along as
+            # a traced per-pool scalar (pure arithmetic in the twin).
+            return jax.vmap(
+                lambda cm, *a: _advance_1(t_limit, *a, c_max=cm),
+                in_axes=(0,) * (len(args) + 1),
+            )(cmax_v, *args)
 
     def blocks_for(tok):
         return jnp.maximum(1, (tok + (KV_BLOCK_TOKENS - 1)) // KV_BLOCK_TOKENS)
 
-    def init_pool(ps: _PoolSpec):
-        I, S = ps.max_inst, ps.n_seq
-        z2 = jnp.zeros((I, S), i32)
-        return {
-            "occ": jnp.zeros((I, S), bool),
-            "rid": jnp.full((I, S), -1, i32),
-            "enq": jnp.zeros((I, S), f64),
-            "inp": z2,
-            "outp": z2,
-            "pre": z2,
-            "rem": z2,
-            "gen": z2,
-            "blk": z2,
-            "ft": jnp.full((I, S), jnp.nan, f64),
-            "tr": jnp.zeros((I, S), bool),
-            "pc": z2,
-            "sq": z2,
-            "free": jnp.full((I,), ps.total_blocks, i32),
-            "wake": jnp.full((I,), jnp.inf, f64),
-            "nact": jnp.zeros((I,), i32),
-            "qlen": jnp.zeros((I,), i32),
-            "load": jnp.zeros((I,), i32),
-            "qh": jnp.full((I,), -1, i32),
-            "qt": jnp.full((I,), -1, i32),
-            "qnext": jnp.full((n + 1,), -1, i32),
-            "vrid": jnp.zeros((I, S), i32),
-            "vinp": jnp.zeros((I, S), i32),
-            "vpc": jnp.zeros((I, S), i32),
-            "vcnt": jnp.zeros((I,), i32),
-            "sqc": jnp.asarray(0, i32),
-            "npre": jnp.asarray(0, i32),
-            "nrej": jnp.asarray(0, i32),
-            "ntr": jnp.asarray(0, i32),
-        }
-
-    def pool_errors(pools_):
-        return jnp.stack([p["npre"] + p["nrej"] + p["ntr"] for p in pools_])
-
     def wake_min_all(pools_):
-        return functools.reduce(
-            jnp.minimum, [jnp.min(p["wake"]) for p in pools_]
-        )
+        return jnp.min(pools_["wake"])
 
-    def core(trace, lane):
+    def core(trace, lane, rec0):
+        _count_trace(("sim_core", P, n, bool(return_records), bool(use_pallas)))
         arr_t = trace["arr"]
         inp_t = trace["inp"]
         out_t = trace["outp"]
         bud_t = trace["budget"]
         ctrl = lane["ctrl"]
 
-        # ---- monitoring window + in-step AIMD controller ------------------
-        def window_step(c, now_t):
-            fire = (c["win_seen"] - c["win_prev"]) >= win
-            cur = pool_errors(c["pools"])
-            delta = cur - c["prev_err"]
-            wr = c["win_seen"] - c["win_prev"]
-            queues = jnp.stack([jnp.sum(p["qlen"], dtype=i32) for p in c["pools"]])
-            pressure = queues.astype(jnp.float32) / jnp.maximum(
-                1, lane["ninst"]
-            ).astype(jnp.float32)
-            old = c["th"]
-            moved = jnp.asarray(False)
-            th = old
-            if P > 1:
-                # AIMD per boundary — the exact decision rule and constants
-                # of AdaptiveController._aimd_move / update().
-                wrf = jnp.maximum(wr, 1).astype(jnp.float32)
-                props = []
-                for k in range(P - 1):
-                    err_rate = delta[k].astype(jnp.float32) / wrf
-                    p_lo, p_hi = pressure[k], pressure[k + 1]
-                    dec = (err_rate > ctrl["err_hi"]) | (
-                        (p_lo > ctrl["over_hi"] * jnp.maximum(p_hi, 0.25))
-                        & (p_lo > 1.0)
-                    )
-                    inc = (~dec) & (p_hi < 0.25) & (p_lo < 1.0)
-                    down = (
-                        old[k].astype(jnp.float32) * ctrl["factor"]
-                    ).astype(i32)
-                    props.append(
-                        jnp.where(
-                            dec, down, jnp.where(inc, old[k] + ctrl["step"], old[k])
+        def next_arr_at(a):
+            return jnp.where(a < n, arr_t[jnp.minimum(a, n - 1)], jnp.inf)
+
+        # ---- arrival drain (small carry: dispatch state only) -------------
+        def drain(c):
+            # Loop-invariant pool state during a drain: dispatch touches
+            # only the FIFO/load/wake/nrej fields, so the window snapshot's
+            # other inputs are frozen closures — values identical to the
+            # full-carry formulation, but the masked per-iteration select
+            # covers only the small carry below.
+            frozen = {
+                "npre": c["pools"]["npre"],
+                "ntr": c["pools"]["ntr"],
+                "nact": c["pools"]["nact"],
+                "free": c["pools"]["free"],
+            }
+
+            # ---- monitoring window + in-step AIMD controller --------------
+            def window_step(sc, now_t):
+                fire = (sc["win_seen"] - sc["win_prev"]) >= win
+                cur = frozen["npre"] + sc["pools"]["nrej"] + frozen["ntr"]
+                delta = cur - sc["prev_err"]
+                wr = sc["win_seen"] - sc["win_prev"]
+                queues = jnp.sum(sc["pools"]["qlen"], axis=1, dtype=i32)
+                pressure = queues.astype(jnp.float32) / jnp.maximum(
+                    1, lane["ninst"]
+                ).astype(jnp.float32)
+                old = sc["th"]
+                moved = jnp.asarray(False)
+                th = old
+                if P > 1:
+                    # AIMD per boundary — the exact decision rule and
+                    # constants of AdaptiveController._aimd_move / update().
+                    wrf = jnp.maximum(wr, 1).astype(jnp.float32)
+                    props = []
+                    for k in range(P - 1):
+                        err_rate = delta[k].astype(jnp.float32) / wrf
+                        p_lo, p_hi = pressure[k], pressure[k + 1]
+                        dec = (err_rate > ctrl["err_hi"]) | (
+                            (p_lo > ctrl["over_hi"] * jnp.maximum(p_hi, 0.25))
+                            & (p_lo > 1.0)
                         )
+                        inc = (~dec) & (p_hi < 0.25) & (p_lo < 1.0)
+                        down = (
+                            old[k].astype(jnp.float32) * ctrl["factor"]
+                        ).astype(i32)
+                        props.append(
+                            jnp.where(
+                                dec,
+                                down,
+                                jnp.where(inc, old[k] + ctrl["step"], old[k]),
+                            )
+                        )
+                    # Feasibility projection: forward pass with a running
+                    # lower bound; degenerate case falls back to the old
+                    # vector.
+                    lo = ctrl["b_min"]
+                    feasible = jnp.asarray(True)
+                    newv = []
+                    for k in range(P - 1):
+                        cap = spec.pools[k].c_max
+                        feasible = feasible & (lo <= cap)
+                        nk = jnp.minimum(jnp.maximum(props[k], lo), cap)
+                        newv.append(nk)
+                        lo = nk + 1
+                    newv = jnp.where(feasible, jnp.stack(newv), old)
+                    apply = fire & (ctrl["enabled"] > 0) & (wr > 0)
+                    th = jnp.where(apply, newv, old)
+                    moved = apply & jnp.any(newv != old)
+
+                # Device telemetry snapshot (post-controller thresholds,
+                # same ordering as the host's _window_step).
+                wn = sc["win"]
+                wdx = jnp.minimum(sc["wi"], win_cap - 1)
+
+                def put(name, val):
+                    return wn[name].at[wdx].set(
+                        jnp.where(fire, val, wn[name][wdx])
                     )
-                # Feasibility projection: forward pass with a running lower
-                # bound; degenerate case falls back to the old vector.
-                lo = ctrl["b_min"]
-                feasible = jnp.asarray(True)
-                newv = []
-                for k in range(P - 1):
-                    cap = spec.pools[k].c_max
-                    feasible = feasible & (lo <= cap)
-                    nk = jnp.minimum(jnp.maximum(props[k], lo), cap)
-                    newv.append(nk)
-                    lo = nk + 1
-                newv = jnp.where(feasible, jnp.stack(newv), old)
-                apply = fire & (ctrl["enabled"] > 0) & (wr > 0)
-                th = jnp.where(apply, newv, old)
-                moved = apply & jnp.any(newv != old)
 
-            # Device telemetry snapshot (post-controller thresholds, same
-            # ordering as the host's _window_step).
-            wn = c["win"]
-            wdx = jnp.minimum(c["wi"], win_cap - 1)
-
-            def put(name, val):
-                return wn[name].at[wdx].set(
-                    jnp.where(fire, val, wn[name][wdx])
-                )
-
-            th_row = th if P > 1 else jnp.zeros((nb,), i32)
-            wn = {
-                "t_req": put("t_req", c["win_seen"]),
-                "now": put("now", now_t),
-                "th": put("th", th_row),
-                "queue": put("queue", queues),
-                "active": put(
-                    "active", jnp.stack([jnp.sum(p["nact"], dtype=i32) for p in c["pools"]])
-                ),
-                "freeb": put(
-                    "freeb", jnp.stack([jnp.sum(p["free"], dtype=i32) for p in c["pools"]])
-                ),
-                "pre": put("pre", jnp.stack([p["npre"] for p in c["pools"]])),
-                "rej": put("rej", jnp.stack([p["nrej"] for p in c["pools"]])),
-                "trunc": put("trunc", jnp.stack([p["ntr"] for p in c["pools"]])),
-            }
-            return {
-                **c,
-                "th": th,
-                "prev_err": jnp.where(fire, cur, c["prev_err"]),
-                "win_prev": jnp.where(fire, c["win_seen"], c["win_prev"]),
-                "wi": c["wi"] + jnp.where(fire, 1, 0),
-                "moves": c["moves"] + jnp.where(moved, 1, 0),
-                "win": wn,
-            }
-
-        # ---- dispatch one arrival -----------------------------------------
-        def dispatch(c):
-            a = c["a"]
-            ai = jnp.minimum(a, n - 1)
-            t = arr_t[ai]
-            pidx = jnp.searchsorted(
-                c["th"][: P - 1], bud_t[ai], side="left"
-            ).astype(i32)
-            rec = c["rec"]
-            rec = {**rec, "pool": rec["pool"].at[ai].set(pidx)}
-            pools_ = list(c["pools"])
-            for p in range(P):
-                ps = spec.pools[p]
-                st = pools_[p]
-                sel = pidx == p
-                alive = jnp.arange(ps.max_inst) < lane["ninst"][p]
-                i = jnp.argmin(jnp.where(alive, st["load"], _BIG_I))
-                rej = inp_t[ai] >= ps.c_max
-                # Submit-time rejection: prompt alone exceeds C_max.
-                ridx = jnp.where(sel & rej, ai, n)
-                rec = {
-                    **rec,
-                    "first": rec["first"].at[ridx].set(t),
-                    "finish": rec["finish"].at[ridx].set(t),
-                    "rej": rec["rej"].at[ridx].set(True),
+                th_row = th if P > 1 else jnp.zeros((nb,), i32)
+                wn = {
+                    "t_req": put("t_req", sc["win_seen"]),
+                    "now": put("now", now_t),
+                    "th": put("th", th_row),
+                    "queue": put("queue", queues),
+                    "active": put(
+                        "active", jnp.sum(frozen["nact"], axis=1, dtype=i32)
+                    ),
+                    "freeb": put(
+                        "freeb", jnp.sum(frozen["free"], axis=1, dtype=i32)
+                    ),
+                    "pre": put("pre", frozen["npre"]),
+                    "rej": put("rej", sc["pools"]["nrej"]),
+                    "trunc": put("trunc", frozen["ntr"]),
                 }
+                return {
+                    **sc,
+                    "th": th,
+                    "prev_err": jnp.where(fire, cur, sc["prev_err"]),
+                    "win_prev": jnp.where(fire, sc["win_seen"], sc["win_prev"]),
+                    "wi": sc["wi"] + jnp.where(fire, 1, 0),
+                    "moves": sc["moves"] + jnp.where(moved, 1, 0),
+                    "win": wn,
+                }
+
+            # ---- dispatch one arrival -------------------------------------
+            def dispatch(sc):
+                a = sc["a"]
+                ai = jnp.minimum(a, n - 1)
+                t = arr_t[ai]
+                pidx = jax_pool_ids(sc["th"][: P - 1], bud_t[ai])
+                pool_rec = sc["pool"].at[ai].set(pidx)
+                st = sc["pools"]
+                pg = jnp.arange(P)
+                sel = pidx == pg
+                alive = ig2 < lane["ninst"][:, None]
+                i = jnp.argmin(jnp.where(alive, st["load"], _BIG_I), axis=1)
+                # Submit-time rejection (prompt alone exceeds C_max) is
+                # a pure function of the recorded pool id and the trace;
+                # the record columns are folded in post-loop and only
+                # the counter lives here.
+                rej = inp_t[ai] >= cmax_v
                 ok = sel & ~rej
-                qh_i = st["qh"][i]
+                qh_i = st["qh"][pg, i]
+                qt_i = st["qt"][pg, i]
+                wake_i = st["wake"][pg, i]
                 was_empty = qh_i < 0
-                qnext = st["qnext"].at[jnp.where(ok, ai, n)].set(-1)
+                qnext = st["qnext"].at[pg, jnp.where(ok, ai, n)].set(-1)
                 qnext = qnext.at[
-                    jnp.where(ok & ~was_empty, st["qt"][i], n)
+                    pg, jnp.where(ok & ~was_empty, qt_i, n)
                 ].set(ai.astype(i32))
-                pools_[p] = {
+                st = {
                     **st,
                     "qnext": qnext,
-                    "qh": st["qh"].at[i].set(
+                    "qh": st["qh"].at[pg, i].set(
                         jnp.where(ok & was_empty, ai.astype(i32), qh_i)
                     ),
-                    "qt": st["qt"].at[i].set(
-                        jnp.where(ok, ai.astype(i32), st["qt"][i])
+                    "qt": st["qt"].at[pg, i].set(
+                        jnp.where(ok, ai.astype(i32), qt_i)
                     ),
-                    "qlen": st["qlen"].at[i].add(jnp.where(ok, 1, 0)),
-                    "load": st["load"].at[i].add(jnp.where(ok, 1, 0)),
-                    "wake": st["wake"].at[i].set(
-                        jnp.where(
-                            ok & jnp.isinf(st["wake"][i]), t, st["wake"][i]
-                        )
+                    "qlen": st["qlen"].at[pg, i].add(jnp.where(ok, 1, 0)),
+                    "load": st["load"].at[pg, i].add(jnp.where(ok, 1, 0)),
+                    "wake": st["wake"].at[pg, i].set(
+                        jnp.where(ok & jnp.isinf(wake_i), t, wake_i)
                     ),
                     "nrej": st["nrej"] + jnp.where(sel & rej, 1, 0),
                 }
-            c = {
-                **c,
-                "a": a + 1,
-                "pools": tuple(pools_),
-                "rec": rec,
-                "win_seen": c["win_seen"] + 1,
-            }
-            if win > 0:
-                c = window_step(c, t)
-            return c
+                sc = {
+                    **sc,
+                    "a": a + 1,
+                    "pools": st,
+                    "pool": pool_rec,
+                    "win_seen": sc["win_seen"] + 1,
+                }
+                if win > 0:
+                    sc = window_step(sc, t)
+                return sc
 
-        # ---- one masked round for one pool --------------------------------
-        def pool_round(p, st, rec, t_limit):
-            ps = spec.pools[p]
-            I, S = ps.max_inst, ps.n_seq
-            rows = jnp.arange(I)
+            # Arrival-first tie-break: dispatch while t_arr ≤ every wake
+            # (matches the host heap's ``next_arrival <= next_event``).
+            def disp_cond(sc):
+                return (sc["a"] < n) & (
+                    next_arr_at(sc["a"]) <= wake_min_all(sc["pools"])
+                )
+
+            sc = {
+                "a": c["a"],
+                "th": c["th"],
+                "prev_err": c["prev_err"],
+                "win_seen": c["win_seen"],
+                "win_prev": c["win_prev"],
+                "wi": c["wi"],
+                "moves": c["moves"],
+                "win": c["win"],
+                "pool": c["pool"],
+                "pools": {k: c["pools"][k] for k in _DRAIN_POOL_KEYS},
+            }
+            sc = lax.while_loop(disp_cond, dispatch, sc)
+            return {
+                **c,
+                "a": sc["a"],
+                "th": sc["th"],
+                "prev_err": sc["prev_err"],
+                "win_seen": sc["win_seen"],
+                "win_prev": sc["win_prev"],
+                "wi": sc["wi"],
+                "moves": sc["moves"],
+                "win": sc["win"],
+                "pool": sc["pool"],
+                "pools": {**c["pools"], **sc["pools"]},
+            }
+
+        # ---- one masked round over the stacked pools ----------------------
+        def pool_round(st, rec, rejt, t_limit):
             due = st["wake"] < t_limit
 
             # Admission fixpoint: one wave admits/rejects at most one head
             # per due instance; loops until no instance can make progress.
             # (Instances are independent, so wave order ≡ the host's
-            # per-instance sequential admission.)
+            # per-instance sequential admission.) The carry is the slot
+            # state plus the one staging column admission writes.
             def adm_masks(st_):
                 stash = st_["vcnt"] > 0
-                hrid = jnp.where(stash, st_["vrid"][:, 0], st_["qh"])
+                hrid = jnp.where(stash, st_["vrid"][:, :, 0], st_["qh"])
                 has = due & (stash | (st_["qh"] >= 0))
                 hc = jnp.clip(hrid, 0, n - 1)
-                hinp = jnp.where(stash, st_["vinp"][:, 0], inp_t[hc])
-                hpc = jnp.where(stash, st_["vpc"][:, 0], 0)
+                hinp = jnp.where(stash, st_["vinp"][:, :, 0], inp_t[hc])
+                hpc = jnp.where(stash, st_["vpc"][:, :, 0], 0)
                 need = blocks_for(hinp)
-                can = st_["nact"] < S
-                rejm = has & can & (need > ps.total_blocks)
+                can = st_["nact"] < nseq_v[:, None]
+                rejm = has & can & (need > tblk_v[:, None])
                 admm = has & can & ~rejm & (need <= st_["free"])
                 return stash, hrid, hc, hinp, hpc, need, rejm, admm
 
@@ -388,43 +670,62 @@ def _make_core(spec: _SimSpec, n: int, return_records: bool):
                 return jnp.any(rejm | admm)
 
             def adm_body(val):
-                st_, rec_ = val
+                st_, rejt_ = val
                 stash, hrid, hc, hinp, hpc, need, rejm, admm = adm_masks(st_)
                 prog = rejm | admm
                 # pop the head (victim stash first — head-of-line order)
                 pop_st = prog & stash
                 pop_f = prog & ~stash
 
-                def shiftl(arr2):
+                def shiftl(arr3):
                     return jnp.concatenate(
-                        [arr2[:, 1:], arr2[:, :1]], axis=1
+                        [arr3[:, :, 1:], arr3[:, :, :1]], axis=2
                     )
 
-                vrid = jnp.where(pop_st[:, None], shiftl(st_["vrid"]), st_["vrid"])
-                vinp = jnp.where(pop_st[:, None], shiftl(st_["vinp"]), st_["vinp"])
-                vpc = jnp.where(pop_st[:, None], shiftl(st_["vpc"]), st_["vpc"])
-                nxt = st_["qnext"][jnp.clip(st_["qh"], 0, n)]
+                vrid = jnp.where(
+                    pop_st[:, :, None], shiftl(st_["vrid"]), st_["vrid"]
+                )
+                vinp = jnp.where(
+                    pop_st[:, :, None], shiftl(st_["vinp"]), st_["vinp"]
+                )
+                vpc = jnp.where(
+                    pop_st[:, :, None], shiftl(st_["vpc"]), st_["vpc"]
+                )
+                nxt = jnp.take_along_axis(
+                    st_["qnext"], jnp.clip(st_["qh"], 0, n), axis=1
+                )
                 qh = jnp.where(pop_f, nxt, st_["qh"])
                 qt = jnp.where(pop_f & (nxt < 0), -1, st_["qt"])
-                # admission-reject record at now = wake (host: add_one with
-                # first = finish = now, zero output/preemptions)
+                # admission-reject: stage the reject timestamp only (host:
+                # add_one with first = finish = now); the record columns
+                # fold in post-loop from rejt. One flattened scatter
+                # covers every pool (request ids are disjoint across
+                # pools; non-rejecting heads aim at the scratch row).
                 ridx = jnp.where(rejm, hc, n)
-                rec_ = {
-                    **rec_,
-                    "first": rec_["first"].at[ridx].set(st_["wake"]),
-                    "finish": rec_["finish"].at[ridx].set(st_["wake"]),
-                    "rej": rec_["rej"].at[ridx].set(True),
-                }
+                rejt_ = rejt_.at[ridx].set(
+                    st_["wake"], mode="promise_in_bounds"
+                )
                 # admit into the first free slot (argmin over occupied —
-                # the host's np.argmin tie-break)
-                slot = jnp.argmin(st_["occ"], axis=1)
+                # the host's np.argmin tie-break; padded slots sit past
+                # every real slot, and ``can`` already gates full pools)
+                slot = jnp.argmin(st_["occ"], axis=2)
                 base = st_["sqc"]
-                rank = (jnp.cumsum(admm) - admm).astype(i32)
+                rank = (jnp.cumsum(admm, axis=1) - admm).astype(i32)
 
-                def w2(arr2, val):
-                    return arr2.at[rows, slot].set(
-                        jnp.where(admm, val, arr2[rows, slot])
+                # One-hot admit writes: each instance fills at most one
+                # slot per wave, so a masked eltwise where over (P, I, S)
+                # replaces a gather + 2-update scatter pair per column —
+                # XLA:CPU expands each of those into a serial while with
+                # full-array boundary copies; the where fuses instead.
+                sl_hot = (
+                    jnp.arange(S)[None, None, :] == slot[:, :, None]
+                ) & admm[:, :, None]
+
+                def w2(arr3, val):
+                    v = jnp.broadcast_to(
+                        jnp.asarray(val, arr3.dtype), slot.shape
                     )
+                    return jnp.where(sl_hot, v[:, :, None], arr3)
 
                 return (
                     {
@@ -437,7 +738,8 @@ def _make_core(spec: _SimSpec, n: int, return_records: bool):
                         "qt": qt,
                         "qlen": st_["qlen"] - prog,
                         "load": st_["load"] - rejm,
-                        "nrej": st_["nrej"] + jnp.sum(rejm, dtype=i32),
+                        "nrej": st_["nrej"]
+                        + jnp.sum(rejm, axis=1, dtype=i32),
                         "occ": w2(st_["occ"], True),
                         "rid": w2(st_["rid"], hrid),
                         "enq": w2(st_["enq"], arr_t[hc]),
@@ -450,15 +752,15 @@ def _make_core(spec: _SimSpec, n: int, return_records: bool):
                         "ft": w2(st_["ft"], jnp.nan),
                         "tr": w2(st_["tr"], False),
                         "pc": w2(st_["pc"], hpc),
-                        "sq": w2(st_["sq"], base + rank),
-                        "sqc": base + jnp.sum(admm, dtype=i32),
+                        "sq": w2(st_["sq"], base[:, None] + rank),
+                        "sqc": base + jnp.sum(admm, axis=1, dtype=i32),
                         "free": st_["free"] - jnp.where(admm, need, 0),
                         "nact": st_["nact"] + admm,
                     },
-                    rec_,
+                    rejt_,
                 )
 
-            st, rec = lax.while_loop(adm_cond, adm_body, (st, rec))
+            st, rejt = lax.while_loop(adm_cond, adm_body, (st, rejt))
 
             nact = st["nact"]
             busy = due & (nact > 0)
@@ -469,112 +771,183 @@ def _make_core(spec: _SimSpec, n: int, return_records: bool):
                 st["wake"],
             )
             now = jnp.where(busy, st["wake"], 0.0)
-            t_it = W + H * nact.astype(f64)
-            bb = busy[:, None]
+            bb = busy[:, :, None]
             occ = st["occ"]
-
-            # one prefill chunk to the oldest prefilling sequence
-            pmask = occ & (st["pre"] > 0)
-            has_pre = pmask.any(axis=1) & busy
-            oldest = jnp.argmin(jnp.where(pmask, st["sq"], _BIG_I), axis=1)
-            take = jnp.minimum(st["pre"][rows, oldest], CHUNK)
-            pre_arr = st["pre"].at[rows, oldest].add(
-                jnp.where(has_pre, -take, 0)
-            )
-
-            # event-distance k-jump (identical formulas to the host round)
-            dec = occ & (pre_arr == 0) & (st["rem"] > 0)
             inp2, gen0, rem0, blk0 = st["inp"], st["gen"], st["rem"], st["blk"]
-            ctx0 = inp2 + gen0
-            k_complete = jnp.min(jnp.where(dec, rem0, _BIG_I), axis=1)
-            k_trunc = jnp.min(jnp.where(dec, ps.c_max - ctx0, _BIG_I), axis=1)
-            q = (t_limit - now) / t_it
-            k_time = jnp.where(jnp.isfinite(q), jnp.ceil(q - 1e-9), _BIG_F)
-            k = jnp.minimum(
-                jnp.minimum(k_complete, k_trunc).astype(f64), k_time
+
+            # fused decode-advance (repro.kernels.sim_decode): prefill
+            # chunk + event-distance k-jump + advance + completion staging,
+            # as the jnp twin (vmapped over the pool axis) or the Pallas
+            # kernel (one call per pool) — bit-identical paths.
+            adv = advance_all(
+                t_limit,
+                busy,
+                now,
+                nact,
+                st["free"],
+                occ,
+                st["pre"],
+                st["sq"],
+                inp2,
+                gen0,
+                rem0,
+                blk0,
+                st["ft"],
+                st["tr"],
             )
-            k = jnp.where(has_pre, 1.0, jnp.maximum(k, 1.0))
-            k = jnp.minimum(k, float(_BIG_I)).astype(i32)
+            pre_arr = adv["pre"]
+            dec = adv["dec"]
+            end = adv["end"]
+            gen_a = adv["gen"]
+            rem_a = adv["rem"]
+            ft_a = adv["ft"]
+            trunc_n = adv["trunc_new"]
+            tr_a = adv["tr"]
+            comp = adv["comp"]
+            ntr = st["ntr"] + jnp.sum(trunc_n, axis=(1, 2), dtype=i32)
 
-            def growth(kk):
-                ng = gen0 + jnp.where(dec, kk[:, None], 0)
-                nd = jnp.where(occ, blocks_for(inp2 + ng), 0)
-                return jnp.maximum(nd - blk0, 0).sum(axis=1, dtype=i32)
-
-            over = busy & (growth(k) > st["free"])
-            k = jnp.where(over, 1, k)
-            end = now + k.astype(f64) * t_it
-
-            # unified decode pass — the order-free batch preemption rule
-            kcol = jnp.where(dec, k[:, None], 0)
-            gen_a = gen0 + kcol
-            rem_a = rem0 - kcol
-            ft_a = jnp.where(
-                dec & jnp.isnan(st["ft"]), (now + t_it)[:, None], st["ft"]
-            )
-            trunc_n = dec & (inp2 + gen_a >= ps.c_max) & (rem_a > 0) & bb
-            rem_a = jnp.where(trunc_n, 0, rem_a)
-            tr_a = st["tr"] | trunc_n
-            ntr = st["ntr"] + jnp.sum(trunc_n, dtype=i32)
-
-            comp = dec & (rem_a == 0) & bb
+            # One scatter per pool per packed record buffer, over that
+            # pool's *real* ``(max_inst, n_seq)`` slot block. The
+            # stacked arrays are padded to ``(P, max I, max S)``, and
+            # XLA:CPU lowers a batched scatter to a serial per-row
+            # loop, so scattering the padded block pays for slots that
+            # can never complete (a ragged 4×128 + 12×16 topology pads
+            # 4.4×). Request ids are globally unique, so per-pool
+            # updates stay disjoint; non-completing slots hit the
+            # scratch row. Packing same-dtype columns keeps this at
+            # two scatter ops per pool per round instead of five.
             ridx = jnp.where(comp, st["rid"], n)
-            rec = {
-                **rec,
-                "first": rec["first"].at[ridx].set(ft_a),
-                "finish": rec["finish"].at[ridx].set(
-                    jnp.broadcast_to(end[:, None], (I, S))
-                ),
-                "out": rec["out"].at[ridx].set(gen_a),
-                "pre": rec["pre"].at[ridx].set(st["pc"]),
-                "trunc": rec["trunc"].at[ridx].set(tr_a),
-            }
-            free1 = st["free"] + jnp.sum(jnp.where(comp, blk0, 0), axis=1, dtype=i32)
-            ncomp = jnp.sum(comp, axis=1, dtype=i32)
+            recf_new = jnp.stack(
+                [ft_a, jnp.broadcast_to(end[:, :, None], (P, I, S))],
+                axis=-1,
+            )
+            reci_new = jnp.stack(
+                [gen_a, st["pc"], tr_a.astype(i32)], axis=-1
+            )
+            rf, ri = rec["recf"], rec["reci"]
+            for p in range(P):
+                ip, sp = spec.pools[p].max_inst, spec.pools[p].n_seq
+                idx_p = ridx[p, :ip, :sp]
+                rf = rf.at[idx_p].set(
+                    recf_new[p, :ip, :sp], mode="promise_in_bounds"
+                )
+                ri = ri.at[idx_p].set(
+                    reci_new[p, :ip, :sp], mode="promise_in_bounds"
+                )
+            rec = {"recf": rf, "reci": ri}
+            free1 = st["free"] + jnp.sum(
+                jnp.where(comp, blk0, 0), axis=2, dtype=i32
+            )
+            ncomp = jnp.sum(comp, axis=2, dtype=i32)
 
             surv = dec & (rem_a > 0) & bb
             need_s = jnp.where(surv, blocks_for(inp2 + gen_a), blk0)
             grow = jnp.where(surv, need_s - blk0, 0)
-            demand = grow.sum(axis=1, dtype=i32)
-            keyq = jnp.where(surv, -st["enq"], jnp.inf)
-            order = jnp.lexsort((st["sq"], keyq), axis=1)
-            sblk = jnp.take_along_axis(
-                jnp.where(surv, blk0, 0), order, axis=1
-            )
-            sgrow = jnp.take_along_axis(grow, order, axis=1)
-            okj = demand[:, None] - jnp.cumsum(sgrow, axis=1) <= (
-                free1[:, None] + jnp.cumsum(sblk, axis=1)
-            )
-            jsel = jnp.where(
-                demand <= free1, 0, jnp.argmax(okj, axis=1) + 1
-            )
-            inv = jnp.argsort(order, axis=1)  # inverse permutation = rank
-            evict = (inv < jsel[:, None]) & surv
-            npre = st["npre"] + jnp.sum(evict, dtype=i32)
-            free1 = free1 + jnp.sum(jnp.where(evict, blk0, 0), axis=1, dtype=i32)
-            nevict = jnp.sum(evict, axis=1, dtype=i32)
+            demand = grow.sum(axis=2, dtype=i32)
 
-            # victims → stash, in admission (seq_no) order, ahead of the
-            # previous stash (requeue-at-head semantics)
-            gord = jnp.argsort(jnp.where(evict, st["sq"], _BIG_I), axis=1)
-            g_rid = jnp.take_along_axis(st["rid"], gord, axis=1)
-            g_inp = jnp.take_along_axis(inp2 + gen_a, gord, axis=1)
-            g_pc = jnp.take_along_axis(st["pc"] + 1, gord, axis=1)
-            rr = jnp.arange(S)[None, :]
-            in_new = rr < nevict[:, None]
-            old_idx = jnp.clip(rr - nevict[:, None], 0, S - 1)
-            vrid = jnp.where(
-                in_new, g_rid, jnp.take_along_axis(st["vrid"], old_idx, axis=1)
-            )
-            vinp = jnp.where(
-                in_new, g_inp, jnp.take_along_axis(st["vinp"], old_idx, axis=1)
-            )
-            vpc = jnp.where(
-                in_new, g_pc, jnp.take_along_axis(st["vpc"], old_idx, axis=1)
+            def evict_pass(_):
+                # Sort-free eviction scan. XLA:CPU sorts cost ~40 µs
+                # each inside a while body, so instead of
+                # lexsort/argsort the scan order (enq youngest-first,
+                # admission seq_no tie-break — a total order: seq_no is
+                # unique per instance) comes from pairwise-comparison
+                # ranks over the tiny (S, S) slot square, prefix sums
+                # from the same mask, and the victim stash from a
+                # rank-indexed scatter. Values are bit-identical to the
+                # sorted formulation (keys carry no NaNs and no -0/+0
+                # mix, so IEEE compare ≡ the sort's total order).
+                keyq = jnp.where(surv, -st["enq"], jnp.inf)
+                sq = st["sq"]
+                k_a, k_b = keyq[:, :, :, None], keyq[:, :, None, :]
+                sq_lt = sq[:, :, None, :] < sq[:, :, :, None]  # [a,b]: b<a
+                prec = (k_b < k_a) | ((k_b == k_a) & sq_lt)
+                rank = jnp.sum(prec, axis=3, dtype=i32)
+                le = prec | jnp.eye(S, dtype=bool)[None, None]
+                blkv = jnp.where(surv, blk0, 0)
+                cum_blk = jnp.sum(
+                    jnp.where(le, blkv[:, :, None, :], 0), axis=3, dtype=i32
+                )
+                cum_grow = jnp.sum(
+                    jnp.where(le, grow[:, :, None, :], 0), axis=3, dtype=i32
+                )
+                okj = (
+                    demand[:, :, None] - cum_grow
+                    <= free1[:, :, None] + cum_blk
+                )
+                first_ok = jnp.min(jnp.where(okj, rank, S), axis=2)
+                jsel = jnp.where(
+                    demand <= free1,
+                    0,
+                    jnp.where(first_ok < S, first_ok + 1, 1),
+                )
+                ev = (rank < jsel[:, :, None]) & surv
+                nev = jnp.sum(ev, axis=2, dtype=i32)
+
+                # victims → stash, in admission (seq_no) order, ahead of
+                # the previous stash (requeue-at-head semantics). The
+                # permutation runs as one-hot select-reduces over the
+                # (S, S) square instead of gather/scatter: XLA:CPU's
+                # batched scatter and gather both cost ~50 µs inside a
+                # while body versus ~10 µs for the masked reduce, and
+                # the one-hot sums are exact (one source per slot).
+                vrank = jnp.sum(ev[:, :, None, :] & sq_lt, axis=3, dtype=i32)
+                rr = jnp.arange(S)
+                in_new = rr[None, None, :] < nev[:, :, None]
+                # vm[j, a]: stash slot j takes the victim in slot a
+                # (the one whose victim-rank is j); om[j, a]: slot j
+                # takes previous-stash slot a = j − n_victims.
+                vm = (
+                    ev[:, :, None, :]
+                    & (vrank[:, :, None, :] == rr[None, None, :, None])
+                    & in_new[:, :, :, None]
+                )
+                om = (
+                    rr[None, None, None, :]
+                    == rr[None, None, :, None] - nev[:, :, None, None]
+                ) & ~in_new[:, :, :, None]
+
+                def stash(old3, vals):
+                    return jnp.sum(
+                        jnp.where(vm, vals[:, :, None, :], 0),
+                        axis=3,
+                        dtype=i32,
+                    ) + jnp.sum(
+                        jnp.where(om, old3[:, :, None, :], 0),
+                        axis=3,
+                        dtype=i32,
+                    )
+
+                vr = stash(st["vrid"], st["rid"])
+                vi = stash(st["vinp"], inp2 + gen_a)
+                vp = stash(st["vpc"], st["pc"] + 1)
+                return ev, nev, vr, vi, vp
+
+            def no_evict(_):
+                # demand ≤ free everywhere ⇒ jsel = 0 ⇒ nothing evicts
+                # and the stash is untouched — same values, no sorts.
+                return (
+                    jnp.zeros((P, I, S), bool),
+                    jnp.zeros((P, I), i32),
+                    st["vrid"],
+                    st["vinp"],
+                    st["vpc"],
+                )
+
+            if gate:
+                evict, nevict, vrid, vinp, vpc = lax.cond(
+                    jnp.any(demand > free1), evict_pass, no_evict, None
+                )
+            else:
+                evict, nevict, vrid, vinp, vpc = evict_pass(None)
+            npre = st["npre"] + jnp.sum(evict, axis=(1, 2), dtype=i32)
+            free1 = free1 + jnp.sum(
+                jnp.where(evict, blk0, 0), axis=2, dtype=i32
             )
 
             keep = surv & ~evict
-            free1 = free1 - jnp.sum(jnp.where(keep, grow, 0), axis=1, dtype=i32)
+            free1 = free1 - jnp.sum(
+                jnp.where(keep, grow, 0), axis=2, dtype=i32
+            )
             cleared = comp | evict
             nact_a = nact - ncomp - nevict
             qlen_a = st["qlen"] + nevict
@@ -605,117 +978,382 @@ def _make_core(spec: _SimSpec, n: int, return_records: bool):
                 "npre": npre,
                 "ntr": ntr,
             }
-            return st, rec
+            return st, rec, rejt
 
-        def round_(c, t_limit):
-            pools_ = list(c["pools"])
-            rec = c["rec"]
-            for p in range(P):
-                pools_[p], rec = pool_round(p, pools_[p], rec, t_limit)
-            return {**c, "pools": tuple(pools_), "rec": rec}
-
-        # ---- outer event loop ---------------------------------------------
-        def next_arr(c):
-            return jnp.where(
-                c["a"] < n, arr_t[jnp.minimum(c["a"], n - 1)], jnp.inf
-            )
-
+        # ---- outer epoch loop: drain arrivals, then sweep rounds ----------
         def cond_fn(c):
             return (c["a"] < n) | jnp.isfinite(wake_min_all(c["pools"]))
 
-        # Arrival-first tie-break: dispatch while t_arr ≤ every wake
-        # (matches the host heap's ``next_arrival <= next_event``). The
-        # arrival drain is its own inner while_loop rather than one arm of
-        # a lax.cond: vmapped cond lowers to select and would execute the
-        # expensive round body once per *arrival* across every lane — the
-        # split keeps the grid's per-iteration cost at dispatch cost while
-        # draining and pays for a round only when an instance is due.
-        def disp_cond(c):
-            return (c["a"] < n) & (
-                next_arr(c) <= wake_min_all(c["pools"])
+        def one_round(c, t_limit):
+            pools_s, rec_s, rejt_s = pool_round(
+                c["pools"], c["rec"], c["rejt"], t_limit
             )
+            return {
+                **c,
+                "pools": pools_s,
+                "rec": rec_s,
+                "rejt": rejt_s,
+                "rounds": c["rounds"] + 1,
+            }
 
-        def body_fn(c):
-            c = lax.while_loop(disp_cond, dispatch, c)
-            return round_(c, next_arr(c))
+        if gate:
+
+            def body_fn(c):
+                c = drain(c)
+                # Coalesced sweep: run rounds back-to-back until the
+                # next arrival (t_limit is loop-invariant — `a` doesn't
+                # move during a sweep), instead of re-entering the outer
+                # body per round. The sweep carry is the slot state +
+                # the completion-written record columns only.
+                t_limit = next_arr_at(c["a"])
+
+                def sweep_cond(s):
+                    return wake_min_all(s[0]) < t_limit
+
+                def sweep_body(s):
+                    pools_s, rec_s, rejt_s, rounds = s
+                    cs = one_round(
+                        {
+                            **c,
+                            "pools": pools_s,
+                            "rec": rec_s,
+                            "rejt": rejt_s,
+                            "rounds": rounds,
+                        },
+                        t_limit,
+                    )
+                    return (cs["pools"], cs["rec"], cs["rejt"], cs["rounds"])
+
+                pools_s, rec_s, rejt_s, rounds = lax.while_loop(
+                    sweep_cond,
+                    sweep_body,
+                    (c["pools"], c["rec"], c["rejt"], c["rounds"]),
+                )
+                return {
+                    **c,
+                    "pools": pools_s,
+                    "rec": rec_s,
+                    "rejt": rejt_s,
+                    "rounds": rounds,
+                    "iters": c["iters"] + 1,
+                }
+
+        else:
+
+            def body_fn(c):
+                # Vmapped lanes: drain arrivals, then exactly ONE round
+                # per outer iteration. A nested sweep loop (rounds
+                # back-to-back until the next arrival) would run to the
+                # max round count over lanes per epoch — Σ_epochs
+                # max_lanes ≫ max_lanes Σ_epochs once lanes diverge, a
+                # measured 5.6× blowup on the 16-lane threshold sweep —
+                # while a flat one-action ``lax.cond`` pays both branch
+                # bodies plus two full-carry selects per iteration under
+                # vmap. One unconditional round per outer step keeps
+                # lockstep losses near zero (arrival streams are shared
+                # across lanes, so the drain while stays synchronized)
+                # and a lane with nothing due runs a masked no-op round
+                # — bit-identical, modulo the scratch record row.
+                c = drain(c)
+                c = one_round(c, next_arr_at(c["a"]))
+                return {**c, "iters": c["iters"] + 1}
 
         c0 = {
             "a": jnp.asarray(0, i32),
-            "pools": tuple(init_pool(ps) for ps in spec.pools),
-            "rec": {
-                "first": jnp.zeros((n + 1,), f64),
-                "finish": jnp.zeros((n + 1,), f64),
-                "out": jnp.zeros((n + 1,), i32),
-                "pre": jnp.zeros((n + 1,), i32),
-                "trunc": jnp.zeros((n + 1,), bool),
-                "rej": jnp.zeros((n + 1,), bool),
-                "pool": jnp.zeros((n + 1,), i32),
-            },
+            "pools": _init_pools(spec, n),
+            "rec": {"recf": rec0["recf"], "reci": rec0["reci"]},
+            "pool": rec0["pool"],
+            "rejt": rec0["rejt"],
             "th": lane["th"],
             "prev_err": jnp.zeros((P,), i32),
             "win_seen": jnp.asarray(0, i32),
             "win_prev": jnp.asarray(0, i32),
             "wi": jnp.asarray(0, i32),
             "moves": jnp.asarray(0, i32),
-            "win": {
-                "t_req": jnp.zeros((win_cap,), i32),
-                "now": jnp.zeros((win_cap,), f64),
-                "th": jnp.zeros((win_cap, nb), i32),
-                "queue": jnp.zeros((win_cap, P), i32),
-                "active": jnp.zeros((win_cap, P), i32),
-                "freeb": jnp.zeros((win_cap, P), i32),
-                "pre": jnp.zeros((win_cap, P), i32),
-                "rej": jnp.zeros((win_cap, P), i32),
-                "trunc": jnp.zeros((win_cap, P), i32),
-            },
+            "iters": jnp.asarray(0, i32),
+            "rounds": jnp.asarray(0, i32),
+            "win": _init_windows(P, nb, win_cap),
         }
         c = lax.while_loop(cond_fn, body_fn, c0)
 
-        rec = {k: v[:n] for k, v in c["rec"].items()}
-        compm = ~rec["rej"]
-        ttft = jnp.where(compm, rec["first"] - arr_t, jnp.nan)
+        # ---- post-loop record folding -------------------------------------
+        # Admission rejects: staged timestamp is finite. Submit rejects:
+        # the prompt alone exceeds the recorded pool's C_max. Both write
+        # first = finish = reject time, exactly as the host's add_one.
+        # The fold runs at full (n+1,) length so the outputs can alias the
+        # donated input buffers (the scratch row n is sliced off on the
+        # host; its folded value is meaningless).
+        arr_p = jnp.concatenate([arr_t, jnp.zeros((1,), f64)])
+        inp_p = jnp.concatenate([inp_t, jnp.zeros((1,), i32)])
+        rejt = c["rejt"]
+        arej = jnp.isfinite(rejt)
+        srej = inp_p >= cmax_v[c["pool"]]
+        rejm = arej | srej
+        # Rejected rows get first = finish = reject time, so the fold
+        # is one masked where over the packed f64 buffer (the output
+        # keeps the donated buffer's (n + 1, 2) shape and aliases it).
+        recf_full = jnp.where(
+            rejm[:, None],
+            jnp.where(arej, rejt, arr_p)[:, None],
+            c["rec"]["recf"],
+        )
+        rec_full = {
+            "recf": recf_full,
+            "reci": c["rec"]["reci"],
+            "pool": c["pool"],
+            "rejt": rejt,
+            "rej": rejm,
+        }
+        first = recf_full[:n, 0]
+        finish = recf_full[:n, 1]
+        out_tok = rec_full["reci"][:n, 0]
+        trunc = rec_full["reci"][:n, 2]
+        pool_c = c["pool"][:n]
+
+        compm = ~rejm[:n]
+        ttft = jnp.where(compm, first - arr_t, jnp.nan)
         tpot = jnp.where(
-            compm & (rec["out"] > 1),
-            (rec["finish"] - rec["first"]) / jnp.maximum(rec["out"] - 1, 1),
+            compm & (out_tok > 1),
+            (finish - first) / jnp.maximum(out_tok - 1, 1),
             jnp.nan,
         )
         out = {
             "metrics": {
                 "completed": jnp.sum(compm),
-                "rejected": jnp.sum(rec["rej"]),
-                "truncated": jnp.sum(rec["trunc"]),
+                "rejected": jnp.sum(rejm[:n]),
+                "truncated": jnp.sum(trunc),
                 "routed": jnp.stack(
-                    [jnp.sum(rec["pool"] == p) for p in range(P)]
+                    [jnp.sum(pool_c == p) for p in range(P)]
                 ),
                 "ttft_mean": jnp.nanmean(ttft),
                 "ttft_p50": jnp.nanpercentile(ttft, 50),
                 "ttft_p99": jnp.nanpercentile(ttft, 99),
                 "tpot_mean": jnp.nanmean(tpot),
                 "tpot_p99": jnp.nanpercentile(tpot, 99),
-                "t_end": jnp.max(rec["finish"]),
-                "makespan": jnp.max(rec["finish"]) - jnp.min(arr_t),
+                "t_end": jnp.max(finish),
+                "makespan": jnp.max(finish) - jnp.min(arr_t),
             },
-            "preempt": jnp.stack([p["npre"] for p in c["pools"]]),
-            "reject": jnp.stack([p["nrej"] for p in c["pools"]]),
-            "truncate": jnp.stack([p["ntr"] for p in c["pools"]]),
+            "preempt": c["pools"]["npre"],
+            "reject": c["pools"]["nrej"],
+            "truncate": c["pools"]["ntr"],
             "th": c["th"],
             "moves": c["moves"],
             "nwin": c["wi"],
             "win": c["win"],
+            "iters": c["iters"],
+            "rounds": c["rounds"],
         }
         if return_records:
-            out["rec"] = rec
+            # Full (n + 1,) leaves so every output can alias its donated
+            # input buffer; callers slice off the scratch row.
+            out["rec"] = rec_full
         return out
 
     return core
 
 
 @functools.lru_cache(maxsize=None)
-def _runner(spec: _SimSpec, n: int, return_records: bool, grid: bool):
-    """Cached jitted simulation, specialized per (spec, n, outputs, vmap)."""
-    core = _make_core(spec, n, return_records)
-    fn = jax.vmap(core, in_axes=(None, 0)) if grid else core
-    return jax.jit(fn)
+def _runner(
+    spec: _SimSpec,
+    n: int,
+    return_records: bool,
+    grid: bool,
+    use_pallas: bool = False,
+):
+    """Cached jitted simulation, specialized per (spec, n, outputs, vmap).
+
+    The third argument (record buffers) is donated — XLA writes the
+    scatters into the caller's buffers in place."""
+    core = _make_core(spec, n, return_records, use_pallas, gate=not grid)
+    fn = jax.vmap(core, in_axes=(None, 0, 0)) if grid else core
+    return jax.jit(fn, donate_argnums=(2,))
+
+
+# ---------------------------------------------------------------------------
+# AOT executable cache + probes
+# ---------------------------------------------------------------------------
+
+#: {(spec, n, return_records, grid, g, pallas): {"lower_s", "compile_s"}}
+_COMPILE_STATS: dict = {}
+
+#: Counters from the most recent compiled run (see :func:`last_run_stats`).
+_LAST_RUN: dict = {}
+
+
+def _abstract_inputs(spec: _SimSpec, n: int, grid: bool, g: int):
+    """ShapeDtypeStructs matching the runtime arguments of ``_runner``."""
+    P = len(spec.pools)
+    sds = jax.ShapeDtypeStruct
+
+    def L(shape, dt):
+        return sds(((g,) + shape) if grid else shape, dt)
+
+    trace = {
+        "arr": sds((n,), np.float64),
+        "inp": sds((n,), np.int32),
+        "outp": sds((n,), np.int32),
+        "budget": sds((n,), np.int32),
+    }
+    lane = {
+        "th": L((P - 1,), np.int32),
+        "ninst": L((P,), np.int32),
+        "ctrl": {
+            "enabled": L((), np.int32),
+            "b_min": L((), np.int32),
+            "step": L((), np.int32),
+            "factor": L((), np.float32),
+            "err_hi": L((), np.float32),
+            "over_hi": L((), np.float32),
+        },
+    }
+    rec = {
+        name: L((n + 1,) if w == 1 else (n + 1, w), dt)
+        for name, dt, w in _REC_DTYPES
+    }
+    return trace, lane, rec
+
+
+@functools.lru_cache(maxsize=None)
+def _aot(
+    spec: _SimSpec,
+    n: int,
+    return_records: bool,
+    grid: bool,
+    g: int,
+    use_pallas: bool,
+):
+    """AOT-compiled executable for one static shape key.
+
+    ``.lower().compile()`` runs here exactly once per key; wall-clock
+    lower/compile times land in ``_COMPILE_STATS`` so the benchmark's
+    ``jax_compile`` row can report compilation alone (no run attached).
+    """
+    with enable_x64(), warnings.catch_warnings():
+        if not return_records:
+            # Without record outputs the donated buffers have no output
+            # to alias into — donation still lets XLA recycle them as
+            # in-loop scratch, so the "not usable" note is expected.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+        fn = _runner(spec, n, return_records, grid, use_pallas)
+        targs, lane, rec = _abstract_inputs(spec, n, grid, g)
+        t0 = time.perf_counter()
+        lowered = fn.lower(targs, lane, rec)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+    _COMPILE_STATS[(spec, n, return_records, grid, g, use_pallas)] = {
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+    }
+    return compiled
+
+
+def last_run_stats() -> dict:
+    """Loop counters from the most recent compiled run on this host.
+
+    Keys: ``iters`` (outer epochs, coalesced bound ``n + 1``),
+    ``rounds`` (coalesced sweep rounds ≈ the pre-coalescing outer
+    iteration count), ``n``, and ``mode`` (``"fleet"``/``"grid"``; grid
+    adds ``g`` and reports per-lane maxima plus totals)."""
+    return dict(_LAST_RUN)
+
+
+def compile_stats() -> list[dict]:
+    """Every AOT compilation this process paid, with readable keys.
+
+    One dict per ``_aot`` cache entry: ``n``, ``return_records``,
+    ``grid``, ``g``, ``pallas`` plus the measured ``lower_s`` /
+    ``compile_s`` walls. Benchmarks use this to report grid-executable
+    compile time without re-deriving the cache key."""
+    return [
+        {
+            "n": k[1],
+            "return_records": k[2],
+            "grid": k[3],
+            "g": k[4],
+            "pallas": k[5],
+            **v,
+        }
+        for k, v in _COMPILE_STATS.items()
+    ]
+
+
+def carry_report(fleet, trace) -> dict:
+    """Byte sizes of the compiled loop carries for one (fleet, trace).
+
+    Shapes come from ``jax.eval_shape`` over the carry constructors (no
+    tracing of the loop itself). ``record_bytes`` is the donated buffer
+    set, which no longer rides the outer/drain carries."""
+    cols = _as_columns(trace)
+    spec, _, _ = _fleet_spec(fleet, cols)
+    return _carry_report(spec, len(cols))
+
+
+def _carry_report(spec: _SimSpec, n: int) -> dict:
+    P = len(spec.pools)
+    win = spec.win_size
+    win_cap = (n // win + 2) if win > 0 else 1
+    nb = max(P - 1, 1)
+
+    def nbytes(tree) -> int:
+        return int(
+            sum(
+                int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+                for leaf in jax.tree_util.tree_leaves(tree)
+            )
+        )
+
+    with enable_x64():
+        pools = jax.eval_shape(lambda: _init_pools(spec, n))
+        wins = jax.eval_shape(lambda: _init_windows(P, nb, win_cap))
+    rec_bytes = sum(
+        (n + 1) * w * np.dtype(dt).itemsize for _, dt, w in _REC_DTYPES
+    )
+    sweep_rec = sum(
+        (n + 1) * w * np.dtype(dt).itemsize
+        for name, dt, w in _REC_DTYPES
+        if name in ("recf", "reci", "rejt")
+    )
+    i4 = np.dtype(np.int32).itemsize
+    scalars = 7 * i4  # a, win_seen, win_prev, wi, moves, iters, rounds
+    th_bytes = (P - 1) * i4 + P * i4  # th + prev_err
+    drain_pools = nbytes({k: pools[k] for k in _DRAIN_POOL_KEYS})
+    drain = (
+        drain_pools
+        + nbytes(wins)
+        + (n + 1) * i4  # pool column
+        + th_bytes
+        + 5 * i4  # a, win_seen, win_prev, wi, moves
+    )
+    sweep = nbytes(pools) + sweep_rec + i4  # + rounds
+    outer = nbytes(pools) + nbytes(wins) + rec_bytes + th_bytes + scalars
+    return {
+        "carry_bytes": outer,
+        "drain_carry_bytes": drain,
+        "sweep_carry_bytes": sweep,
+        "record_bytes": rec_bytes,
+    }
+
+
+def aot_compile(fleet, trace) -> dict:
+    """Compile the single-lane executable for (fleet, trace) ahead of time.
+
+    Returns the ``_COMPILE_STATS`` entry (``lower_s``, ``compile_s``)
+    plus ``cached`` (True when the executable already existed, i.e. the
+    times are from the original compilation). The subsequent
+    ``run_fleet`` call for the same shape hits the cache and pays no
+    compilation."""
+    cols = _as_columns(trace)
+    spec, _, _ = _fleet_spec(fleet, cols)
+    key = (spec, len(cols), True, False, 0, _pallas_enabled())
+    cached = key in _COMPILE_STATS
+    with enable_x64():
+        _aot(*key)
+    stats = dict(_COMPILE_STATS[key])
+    stats["cached"] = cached
+    return stats
 
 
 # ---------------------------------------------------------------------------
@@ -740,6 +1378,14 @@ def precompute_budget_trajectory(
     host: observations fold in *arrival* order (host folds completions),
     which the routed-tolerance test class bounds.
 
+    Both the estimate and the EMA fold go through the cached kernel
+    factories (``("estimate", chunk, γ)`` / ``("observe", chunk, β)`` in
+    ``kernel_trace_counts()``): epochs are padded to their ramp width, so
+    the whole precompute compiles a handful of shapes once per process
+    instead of dispatching eager ops per chunk. Padding rows carry
+    ``prompt_tokens=0`` and are sliced off before use, so the budgets and
+    the final EMA state are bit-identical to the unpadded fold.
+
     Returns ``(budgets int32 (n,), final CalibState)``.
     """
     n = len(cols)
@@ -751,24 +1397,48 @@ def precompute_budget_trajectory(
     pos = 0
     while pos < n:
         start = pos
+        width = chunk  # kernel shape for this epoch (pre-ramp)
         pos = min(n, pos + chunk)
         chunk = min(epoch_cap, chunk * 2)
-        cat = jnp.asarray(cols.category[start:pos], jnp.int32)
-        budgets[start:pos] = np.asarray(
-            jax_estimate_budget(
-                state,
-                jnp.asarray(cols.byte_len[start:pos]),
-                jnp.asarray(cols.max_output_tokens[start:pos]),
-                cat,
-                gamma=gamma,
-            )
+        m = pos - start
+        pad = width - m
+        cat = jnp.asarray(
+            np.pad(np.asarray(cols.category[start:pos]), (0, pad)), jnp.int32
         )
-        state = jax_update_stream(
+        est = _estimate_budget_kernel(width, gamma)
+        budgets[start:pos] = np.asarray(
+            est(
+                state,
+                jnp.asarray(
+                    np.pad(np.asarray(cols.byte_len[start:pos]), (0, pad))
+                ),
+                jnp.asarray(
+                    np.pad(
+                        np.asarray(cols.max_output_tokens[start:pos]), (0, pad)
+                    )
+                ),
+                cat,
+            )
+        )[:m]
+        upd = _update_stream_kernel(width, beta)
+        state = upd(
             state,
-            jnp.asarray(cols.byte_len[start:pos], jnp.float32),
-            jnp.asarray(cols.true_input_tokens[start:pos], jnp.float32),
+            jnp.asarray(
+                np.pad(
+                    np.asarray(cols.byte_len[start:pos], np.float32), (0, pad)
+                ),
+                jnp.float32,
+            ),
+            jnp.asarray(
+                np.pad(
+                    np.asarray(
+                        cols.true_input_tokens[start:pos], np.float32
+                    ),
+                    (0, pad),
+                ),
+                jnp.float32,
+            ),
             cat,
-            beta=beta,
         )
     return budgets, state
 
@@ -806,31 +1476,16 @@ def _ctrl_params(controller, enabled: bool):
     }
 
 
-# ---------------------------------------------------------------------------
-# FleetSim backend entry (single lane)
-# ---------------------------------------------------------------------------
-
-
-def run_fleet_jax(fleet, trace):
-    """Execute one fleet run on the compiled backend; returns FleetResult.
-
-    Called by ``FleetSim.run`` for ``backend="jax"``. The fleet's
-    ``VectorPoolSim`` shells receive the device-computed records and
-    counters afterwards, so ``fleet.pools[name].record_arrays()``,
-    telemetry replay, and ``router.stats()`` all behave like a host run.
-    """
-    # Import here: fleet imports this module lazily, and metrics/fleet
-    # are imported lazily here, to keep the module graph acyclic.
-    from repro.sim.fleet import FleetResult
-    from repro.sim.metrics import summarize_columns
-
-    cols = (
+def _as_columns(trace) -> TraceColumns:
+    return (
         trace
         if isinstance(trace, TraceColumns)
         else TraceColumns.from_requests(trace)
     ).sorted_by_arrival()
-    n = len(cols)
 
+
+def _fleet_spec(fleet, cols: TraceColumns):
+    """Build the static spec for a live FleetSim (shared with the probes)."""
     ordered = sorted(fleet._pool_index, key=fleet._pool_index.get)
     shells = [fleet.pools[name] for name in ordered]
     spec = _SimSpec(
@@ -851,6 +1506,30 @@ def run_fleet_jax(fleet, trace):
         prefill_chunk=int(fleet.timing.prefill_chunk),
         win_size=int(fleet._win_size),
     )
+    return spec, ordered, shells
+
+
+# ---------------------------------------------------------------------------
+# FleetSim backend entry (single lane)
+# ---------------------------------------------------------------------------
+
+
+def run_fleet_jax(fleet, trace):
+    """Execute one fleet run on the compiled backend; returns FleetResult.
+
+    Called by ``FleetSim.run`` for ``backend="jax"``. The fleet's
+    ``VectorPoolSim`` shells receive the device-computed records and
+    counters afterwards, so ``fleet.pools[name].record_arrays()``,
+    telemetry replay, and ``router.stats()`` all behave like a host run.
+    """
+    # Import here: fleet imports this module lazily, and metrics/fleet
+    # are imported lazily here, to keep the module graph acyclic.
+    from repro.sim.fleet import FleetResult
+    from repro.sim.metrics import summarize_columns
+
+    cols = _as_columns(trace)
+    n = len(cols)
+    spec, ordered, shells = _fleet_spec(fleet, cols)
     P = len(spec.pools)
 
     router = fleet.router
@@ -898,10 +1577,18 @@ def run_fleet_jax(fleet, trace):
         )
 
     with enable_x64():
-        out = _runner(spec, n, True, False)(_trace_arrays(cols, budgets), lane)
+        exe = _aot(spec, n, True, False, 0, _pallas_enabled())
+        out = exe(_trace_arrays(cols, budgets), lane, _fresh_records(n))
         out = jax.tree_util.tree_map(np.asarray, out)
+    _LAST_RUN.clear()
+    _LAST_RUN.update(
+        mode="fleet",
+        n=n,
+        iters=int(out["iters"]),
+        rounds=int(out["rounds"]),
+    )
 
-    rec = out["rec"]
+    rec = _unpack_records(out["rec"], n)
     ids = np.asarray(cols.request_id, np.int64)
     arr = np.asarray(cols.arrival_time, np.float64)
     fleet_cols = {
@@ -1111,11 +1798,7 @@ def run_fleet_grid(
     shares the same budget array and the sweep stays exact w.r.t. the
     single-lane jax backend (asserted by the grid-parity test).
     """
-    cols = (
-        trace
-        if isinstance(trace, TraceColumns)
-        else TraceColumns.from_requests(trace)
-    ).sorted_by_arrival()
+    cols = _as_columns(trace)
     n = len(cols)
     if n == 0:
         raise ValueError("run_fleet_grid needs a non-empty trace")
@@ -1190,10 +1873,19 @@ def run_fleet_grid(
 
     lane = {"th": th_arr, "ninst": inst_arr, "ctrl": ctrl}
     with enable_x64():
-        out = _runner(spec, n, return_records, True)(
-            _trace_arrays(cols, budgets), lane
-        )
+        exe = _aot(spec, n, return_records, True, g, _pallas_enabled())
+        out = exe(_trace_arrays(cols, budgets), lane, _fresh_records(n, g))
         out = jax.tree_util.tree_map(np.asarray, out)
+    _LAST_RUN.clear()
+    _LAST_RUN.update(
+        mode="grid",
+        n=n,
+        g=g,
+        iters=int(out["iters"].max()),
+        rounds=int(out["rounds"].max()),
+        iters_total=int(out["iters"].sum()),
+        rounds_total=int(out["rounds"].sum()),
+    )
 
     m = out["metrics"]
     return FleetGridResult(
@@ -1213,5 +1905,7 @@ def run_fleet_grid(
         makespan=m["makespan"],
         final_thresholds=out["th"].reshape(g, P - 1)[:, : P - 1],
         controller_moves=out["moves"].astype(np.int64),
-        records=out.get("rec"),
+        records=(
+            _unpack_records(out["rec"], n) if "rec" in out else None
+        ),
     )

@@ -168,3 +168,84 @@ def test_paged_attention_int8_pages():
     )
     # and well inside the quantization-noise envelope
     assert float(jnp.abs(out - expect).max()) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# sim_decode: the DES decode-advance kernel vs its jnp twin
+# ---------------------------------------------------------------------------
+
+
+def _decode_state(seed, I=3, S=8):
+    """Random but invariant-respecting slot state (float64 exact class)."""
+    rng = np.random.default_rng(seed)
+    occ = rng.random((I, S)) < 0.7
+    pre = np.where(
+        occ & (rng.random((I, S)) < 0.3),
+        rng.integers(1, 600, (I, S)),
+        0,
+    ).astype(np.int32)
+    inp = np.where(occ, rng.integers(16, 1200, (I, S)), 0).astype(np.int32)
+    gen = np.where(occ & (pre == 0), rng.integers(0, 48, (I, S)), 0).astype(
+        np.int32
+    )
+    rem = np.where(occ, rng.integers(1, 120, (I, S)), 0).astype(np.int32)
+    blk = np.where(occ, (inp + gen) // 16 + 1, 0).astype(np.int32)
+    sq = rng.permutation(I * S).reshape(I, S).astype(np.int32)
+    nact = occ.sum(axis=1, dtype=np.int32)
+    busy = nact > 0
+    now = np.where(busy, rng.uniform(0.5, 2.0, I), 0.0)
+    free = rng.integers(0, 64, I).astype(np.int32)
+    ft = np.where(
+        occ & (gen > 0), rng.uniform(0.1, 1.0, (I, S)), np.nan
+    )
+    tr = np.zeros((I, S), bool)
+    t_limit = float(now.max() + 0.75)
+    return dict(
+        t_limit=t_limit, busy=busy, now=now, nact=nact, free=free,
+        occ=occ, pre=pre, sq=sq, inp=inp, gen=gen, rem=rem, blk=blk,
+        ft=ft, tr=tr,
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_sim_decode_pallas_matches_jnp(seed):
+    from repro.kernels.sim_decode import (
+        decode_advance_jnp,
+        decode_advance_pallas,
+    )
+
+    s = _decode_state(seed)
+    kw = dict(w=2**-10, h=2**-13, chunk=512, c_max=2048)
+    with jax.experimental.enable_x64():
+        args = (
+            s["t_limit"], s["busy"], s["now"], s["nact"], s["free"],
+            s["occ"], s["pre"], s["sq"], s["inp"], s["gen"], s["rem"],
+            s["blk"], s["ft"], s["tr"],
+        )
+        out_j = decode_advance_jnp(*args, **kw)
+        out_p = decode_advance_pallas(*args, **kw)
+    assert set(out_j) == set(out_p)
+    for k in out_j:
+        a, b = np.asarray(out_j[k]), np.asarray(out_p[k])
+        assert a.dtype == b.dtype, k
+        assert np.array_equal(a, b, equal_nan=True), k
+
+
+def test_sim_decode_idle_instances_are_inert():
+    """Idle (not busy) instances complete and truncate nothing — the
+    busy-gated outputs the engine consumes unmasked must stay silent
+    (raw ``gen``/``rem`` are busy-masked by the engine itself)."""
+    from repro.kernels.sim_decode import decode_advance_jnp
+
+    s = _decode_state(3)
+    s["busy"] = np.zeros_like(s["busy"])
+    s["now"] = np.zeros_like(s["now"])
+    with jax.experimental.enable_x64():
+        out = decode_advance_jnp(
+            s["t_limit"], s["busy"], s["now"], s["nact"], s["free"],
+            s["occ"], s["pre"], s["sq"], s["inp"], s["gen"], s["rem"],
+            s["blk"], s["ft"], s["tr"],
+            w=2**-10, h=2**-13, chunk=512, c_max=2048,
+        )
+    assert not np.asarray(out["comp"]).any()
+    assert not np.asarray(out["trunc_new"]).any()
